@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: timing, matrix synthesis per paper §V-B."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (jit'd or not), blocked."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def paper_dense_weight(key, m: int) -> jax.Array:
+    """U[-1, 3) dense weight (paper §V-B)."""
+    return jax.random.uniform(key, (m, m), jnp.float32, -1.0, 3.0)
+
+
+def paper_sparse_weight_np(
+    seed: int, m: int, inverse_sparsity: int
+) -> np.ndarray:
+    """Bernoulli element sparsity at density 1/inverse_sparsity with
+    U[-1,3) values (paper §V-B), as a host array."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-1.0, 3.0, (m, m)).astype(np.float32)
+    if inverse_sparsity > 1:
+        mask = rng.random((m, m)) < (1.0 / inverse_sparsity)
+        w = np.where(mask, w, 0.0).astype(np.float32)
+    return w
+
+
+def paper_input(key, m: int, n: int = 64) -> jax.Array:
+    """U[0,1) layer input, batch 64 (paper §V-B)."""
+    return jax.random.uniform(key, (m, n), jnp.float32)
+
+
+def save_results(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load_results(name: str):
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,150 @@
+"""Paper Fig. 6 analogue: parallel scaling of the sparse vs dense DNN layer.
+
+The paper measures 4/16-thread OpenMP speedup on a 24-core POWER8. This
+container exposes ONE core, so wall-clock thread scaling cannot be
+measured here. We reproduce the *structure* of the result instead: the
+work per partition when the same layer is SPMD-partitioned over k
+devices (the quantity whose decay sets the parallel-speedup ceiling),
+measured from compiled per-device HLO FLOPs/bytes at k ∈ {1, 4, 16}.
+
+The paper's qualitative finding — parallel efficiency drops as the
+matrix gets sparser because per-partition work shrinks toward the fixed
+row-processing overhead — appears here as the sparse arm's per-device
+bytes flattening (index/padding overhead) while dense per-device FLOPs
+keep dividing by k.
+
+Run in a SUBPROCESS per k (jax fixes the device count at first init):
+``python -m benchmarks.fig6_parallel`` orchestrates itself.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+M = 4096
+BATCH = 64
+BLOCK = 16
+INVS = (1, 16, 256)
+
+
+def worker(k: int) -> list[dict]:
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={k}"
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch import hlo_analysis
+    from repro.sparse import ops as sparse_ops
+    from repro.sparse.bsr import BlockSparseMatrix
+
+    mesh = jax.make_mesh((k,), ("model",))
+    rows = []
+    with mesh:
+        for inv in INVS:
+            ncb = M // BLOCK
+            bpr = max(1, round(ncb / inv))
+            w = BlockSparseMatrix.random(
+                jax.random.key(0), (M, M), (BLOCK, BLOCK), bpr
+            )
+            y = jax.ShapeDtypeStruct((M, BATCH), jnp.float32)
+            b = jax.ShapeDtypeStruct((M,), jnp.float32)
+            w_specs = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), w
+            )
+            shard_row = NamedSharding(mesh, P("model"))
+            rep = NamedSharding(mesh, P())
+
+            def sparse_fn(w, y, b):
+                return sparse_ops.bsr_matmul_fused_relu(w, y, b)
+
+            in_sh = (
+                jax.tree.map(lambda _: shard_row, w_specs),
+                rep,
+                shard_row,
+            )
+            c = (
+                jax.jit(sparse_fn, in_shardings=in_sh)
+                .lower(w_specs, y, b)
+                .compile()
+            )
+            st = hlo_analysis.analyze(c.as_text())
+            dense_fn = lambda w, y, b: jnp.maximum(w @ y + b[:, None], 0.0)
+            wd = jax.ShapeDtypeStruct((M, M), jnp.float32)
+            cd = (
+                jax.jit(
+                    dense_fn,
+                    in_shardings=(
+                        NamedSharding(mesh, P("model", None)),
+                        rep,
+                        shard_row,
+                    ),
+                )
+                .lower(wd, y, b)
+                .compile()
+            )
+            std = hlo_analysis.analyze(cd.as_text())
+            rows.append(
+                {
+                    "k": k,
+                    "inverse_sparsity": inv,
+                    "sparse_flops_per_dev": st.flops,
+                    "sparse_bytes_per_dev": st.bytes_accessed,
+                    "dense_flops_per_dev": std.flops,
+                    "dense_bytes_per_dev": std.bytes_accessed,
+                }
+            )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker-k", type=int, default=None)
+    args = ap.parse_args()
+    if args.worker_k:
+        print(json.dumps(worker(args.worker_k)))
+        return
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+    all_rows = []
+    for k in (1, 4, 16):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.fig6_parallel", "--worker-k", str(k)],
+            capture_output=True,
+            text=True,
+            env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        if out.returncode != 0:
+            print(out.stderr[-2000:])
+            raise SystemExit(1)
+        all_rows.extend(json.loads(out.stdout.strip().splitlines()[-1]))
+
+    from benchmarks.common import save_results
+
+    base = {
+        (r["inverse_sparsity"],): r for r in all_rows if r["k"] == 1
+    }
+    print(f"{'k':>3s} {'inv':>5s} {'dense work/dev':>15s} {'sparse work/dev':>16s} {'dense eff':>10s} {'sparse eff':>10s}")
+    for r in all_rows:
+        b = base[(r["inverse_sparsity"],)]
+        de = b["dense_flops_per_dev"] / (r["dense_flops_per_dev"] * r["k"]) if r["dense_flops_per_dev"] else 0
+        # sparse work is bytes-dominated at high sparsity: use bytes
+        se = b["sparse_bytes_per_dev"] / (r["sparse_bytes_per_dev"] * r["k"]) if r["sparse_bytes_per_dev"] else 0
+        print(
+            f"{r['k']:3d} {r['inverse_sparsity']:5d} "
+            f"{r['dense_flops_per_dev']:15.3e} {r['sparse_bytes_per_dev']:16.3e} "
+            f"{de:10.2f} {se:10.2f}"
+        )
+    save_results("fig6_parallel", all_rows)
+    print("[fig6] parallel-efficiency ceilings recorded (1-core container: "
+          "work-per-partition analogue of the paper's thread speedup)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper §V-C memory claim: sparse storage ∝ nnz lets GraphBLAS hold
+networks that cannot exist densely (a dense 32768² fp32 W is 4 GiB).
+
+Reports measured bytes for dense vs element (BCOO) vs block (ELL-BSR)
+representations across sizes and sparsities, plus the largest network
+each representation fits into a 16 GiB v5e HBM (8 layers, fp32).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.experimental import sparse as jsparse
+
+from benchmarks.common import paper_sparse_weight_np, save_results
+from repro.sparse.bsr import BlockSparseMatrix
+
+SIZES = (512, 2048, 8192, 32768)
+INVS = (1, 16, 256, 4096)
+
+
+def bcoo_nbytes(w: jsparse.BCOO) -> int:
+    return sum(int(np.prod(b.shape)) * b.dtype.itemsize for b in (w.data, w.indices))
+
+
+def main():
+    rows = []
+    print(f"{'m':>7s} {'inv':>6s} {'dense':>12s} {'BCOO':>12s} {'ELL-BSR':>12s}")
+    for m in SIZES:
+        for inv in INVS:
+            dense_bytes = m * m * 4
+            if m <= 8192:
+                w_host = paper_sparse_weight_np(0, m, inv)
+                sp = jsparse.BCOO.fromdense(jax.numpy.asarray(w_host))
+                el_bytes = bcoo_nbytes(sp)
+                del sp, w_host
+            else:  # avoid allocating 4 GiB on the small container
+                nnz = round(m * m / inv)
+                el_bytes = nnz * (4 + 8)  # fp32 value + 2×int32 index
+            block = 16
+            ncb = m // block
+            bpr = max(1, round(ncb / inv))
+            bl = BlockSparseMatrix.random(
+                jax.random.key(1), (m, m), (block, block), bpr
+            )
+            bl_bytes = bl.nbytes
+            del bl
+            rows.append(
+                {
+                    "m": m,
+                    "inverse_sparsity": inv,
+                    "dense_bytes": dense_bytes,
+                    "bcoo_bytes": el_bytes,
+                    "ell_bsr_bytes": bl_bytes,
+                }
+            )
+            print(
+                f"{m:7d} {inv:6d} {dense_bytes/2**20:10.1f}Mi "
+                f"{el_bytes/2**20:10.1f}Mi {bl_bytes/2**20:10.1f}Mi"
+            )
+    hbm = 16 * 2**30
+    layers = 8
+    for inv in INVS:
+        m_dense = int(np.sqrt(hbm / (4 * layers)))
+        # bytes_sparse(m) = layers · (m²/inv)·12 → m = sqrt(hbm·inv/(12·layers))
+        m_sparse = int(np.sqrt(hbm * inv / (12 * layers)))
+        print(
+            f"[memory] 16GiB HBM, {layers}L fp32: dense fits m≈{m_dense:,}; "
+            f"element-sparse inv={inv} fits m≈{m_sparse:,}"
+        )
+    save_results("memory_table", rows)
+
+
+if __name__ == "__main__":
+    main()

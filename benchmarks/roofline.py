@@ -1,0 +1,109 @@
+"""§Roofline: aggregate the dry-run JSON artifacts into the roofline
+table (per arch × shape × mesh: three terms, dominant bottleneck, MFU
+bound, MODEL_FLOPS/HLO_FLOPs usefulness ratio).
+
+``python -m benchmarks.roofline [--dir experiments/dryrun] [--markdown]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(dir_: str) -> list[dict]:
+    rows = []
+    if not os.path.isdir(dir_):
+        return rows
+    for fn in sorted(os.listdir(dir_)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dir_, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def table(rows: list[dict], markdown: bool = False) -> str:
+    out = []
+    if markdown:
+        out.append(
+            "| arch | shape | mesh | t_compute | t_memory | t_collective |"
+            " dominant | roofline frac | useful FLOPs | GiB/dev |"
+        )
+        out.append("|---|---|---|---|---|---|---|---|---|---|")
+    else:
+        out.append(
+            f"{'arch':<22s} {'shape':<12s} {'mesh':<11s} {'t_comp':>9s}"
+            f" {'t_mem':>9s} {'t_coll':>9s} {'dominant':<10s} {'frac':>6s}"
+            f" {'useful':>7s} {'GiB':>6s}"
+        )
+    for r in rows:
+        if r.get("status") == "skipped":
+            msg = r.get("reason", "")[:48]
+            if markdown:
+                out.append(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                    f" skipped: {msg} |||||||"
+                )
+            else:
+                out.append(
+                    f"{r['arch']:<22s} {r['shape']:<12s} {r['mesh']:<11s}"
+                    f" SKIP: {msg}"
+                )
+            continue
+        if r.get("status") != "ok":
+            out.append(
+                f"{r['arch']:<22s} {r['shape']:<12s} {r['mesh']:<11s}"
+                f" ERROR: {r.get('error', '?')[:60]}"
+            )
+            continue
+        t = r["roofline"]
+        gib = r["memory"]["peak_per_device_bytes"] / 2**30
+        vals = (
+            f"{t['t_compute_s']*1e3:8.1f}ms",
+            f"{t['t_memory_s']*1e3:8.1f}ms",
+            f"{t['t_collective_s']*1e3:8.1f}ms",
+            t["dominant"].replace("t_", "").replace("_s", ""),
+            f"{t['roofline_fraction']:.3f}",
+            f"{r['useful_flops_fraction']:.2f}",
+            f"{gib:.2f}",
+        )
+        if markdown:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                + " | ".join(vals)
+                + " |"
+            )
+        else:
+            out.append(
+                f"{r['arch']:<22s} {r['shape']:<12s} {r['mesh']:<11s}"
+                f" {vals[0]:>9s} {vals[1]:>9s} {vals[2]:>9s} {vals[3]:<10s}"
+                f" {vals[4]:>6s} {vals[5]:>7s} {vals[6]:>6s}"
+            )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print(f"[roofline] no artifacts under {args.dir}; run repro.launch.dryrun")
+        return
+    print(table(rows, markdown=args.markdown))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"])
+        print(
+            f"\n[roofline] worst fraction: {worst['arch']}/{worst['shape']}"
+            f" ({worst['roofline']['roofline_fraction']:.3f});"
+            f" most collective-bound: {coll['arch']}/{coll['shape']}"
+            f" ({coll['roofline']['t_collective_s']*1e3:.0f}ms)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark orchestrator: ``python -m benchmarks.run [--full]``.
+
+One benchmark per paper table/figure (DESIGN.md §9):
+  fig5_sweep    — sparse vs dense forward time vs inverse sparsity (Fig. 5)
+  fig7_scaling  — scaling parameters of those curves (Fig. 7)
+  fig6_parallel — partitioned work-per-device analogue of thread scaling
+                  (Fig. 6; this container has 1 core — see module doc)
+  memory_table  — sparse vs dense storage (§V-C)
+  roofline      — the (arch × shape × mesh) roofline table from the
+                  dry-run artifacts, if present (deliverable g)
+
+``--quick`` shrinks the fig5 grid (used by CI/tests); ``--full`` adds
+m=32768 (several GiB of host RAM and minutes of runtime).
+"""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+
+
+def _run(mod: str, *args: str) -> None:
+    t0 = time.monotonic()
+    print(f"\n===== {mod} {' '.join(args)} =====", flush=True)
+    r = subprocess.run([sys.executable, "-m", mod, *args])
+    if r.returncode != 0:
+        raise SystemExit(f"{mod} failed with {r.returncode}")
+    print(f"===== {mod} done in {time.monotonic()-t0:.1f}s =====", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    fig5_args = ["--quick"] if args.quick else (["--full"] if args.full else [])
+    _run("benchmarks.fig5_sweep", *fig5_args)
+    _run("benchmarks.fig7_scaling")
+    _run("benchmarks.memory_table")
+    _run("benchmarks.fig6_parallel")
+    _run("benchmarks.paper_scale")
+    _run("benchmarks.roofline")
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

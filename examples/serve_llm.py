@@ -1,0 +1,67 @@
+"""Serve a small LLM with batched requests through the serving engine.
+
+Uses any assigned ``--arch`` at reduced (CPU-runnable) scale — the same
+Engine/prefill/decode code path the decode_32k / long_500k dry-run cells
+lower at production scale. Reports prefill + per-token decode throughput
+and the KV-cache footprint.
+
+Run: PYTHONPATH=src python examples/serve_llm.py --arch llama3.2-1b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=48)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).scaled_down(
+        d_model=128, vocab_size=1024, max_seq_len=256
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    n = sum(l.size for l in jax.tree.leaves(params))
+    print(f"== serving {cfg.name}: {n/1e6:.2f}M params, "
+          f"batch {args.batch}, {args.prompt_len}+{args.new_tokens} tokens ==")
+
+    engine = Engine(
+        model,
+        params,
+        batch_size=args.batch,
+        cache_len=args.prompt_len + args.new_tokens,
+        temperature=args.temperature,
+    )
+    prompts = jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+
+    t0 = time.monotonic()
+    tokens, stats = engine.generate(prompts, args.new_tokens)  # includes compile
+    t_cold = time.monotonic() - t0
+    t0 = time.monotonic()
+    tokens, stats = engine.generate(prompts, args.new_tokens)
+    t_warm = time.monotonic() - t0
+
+    print(f"cold (with compile): {t_cold:.2f}s; warm: {t_warm:.2f}s "
+          f"→ {stats['generated_tokens']/t_warm:,.0f} tok/s")
+    print(f"KV/state cache: {stats['cache_bytes']/2**20:.1f} MiB")
+    print("sample:", tokens[0, :16].tolist())
+    assert tokens.shape == (args.batch, args.new_tokens)
+    print("serve_llm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+from repro.core.semiring import (
+    LOG_PLUS,
+    LOR_LAND,
+    MAX_MIN,
+    MAX_PLUS,
+    MIN_MAX,
+    MIN_PLUS,
+    PLUS_TIMES,
+    XOR_AND,
+    Semiring,
+    get_semiring,
+)
+from repro.core import dnn, graphblas, pruning
+
+__all__ = [
+    "Semiring",
+    "get_semiring",
+    "PLUS_TIMES",
+    "MAX_PLUS",
+    "MIN_PLUS",
+    "MAX_MIN",
+    "MIN_MAX",
+    "LOR_LAND",
+    "XOR_AND",
+    "LOG_PLUS",
+    "dnn",
+    "graphblas",
+    "pruning",
+]

@@ -1,0 +1,118 @@
+"""The paper's ReLU DNN (§III, §IV Fig. 4) in JAX.
+
+Two execution modes:
+
+* ``dnn_forward(..., fused=False)`` — **paper-faithful**: each layer is
+  exactly the three GraphBLAS calls of Fig. 4:
+
+    Y[k+1]  = GrB_mxm(FP32AddMul, W[k], Y[k])          # arithmetic semiring
+    Y[k+1]  = GrB_eWiseMult(FP32MaxPlus, Y[k+1], B[k]) # ⊗=+  → bias add
+    Y[k+1]  = GrB_eWiseAdd(FP32MaxPlus, Y[k+1], Zero)  # ⊕=max → ReLU
+
+* ``fused=True`` — beyond-paper: one fused sparse-matmul + bias + max
+  epilogue per layer (single activation stream; see DESIGN.md §2).
+
+Weights may be dense arrays or :class:`BlockSparseMatrix` (homogeneous
+list). ``dnn_forward_scan`` is the stacked/scanned variant used inside
+jit for deep networks (one layer traced once).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graphblas as gb
+from repro.core.semiring import MAX_PLUS, PLUS_TIMES
+from repro.sparse import ops as sparse_ops
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+Weight = Union[Array, BlockSparseMatrix]
+
+
+def dnn_layer(w: Weight, y: Array, b: Array, *, fused: bool = True) -> Array:
+    """One forward layer: max(W·Y + b⊗1ᵀ, 0).  y: (m, n); b: (m,)."""
+    if fused:
+        if isinstance(w, BlockSparseMatrix):
+            return sparse_ops.bsr_matmul_fused_relu(w, y, b)
+        return sparse_ops.dense_matmul_fused_relu(w, y, b)
+    # Paper-faithful three-call GraphBLAS sequence (Fig. 4 lines 30-32).
+    bias = jnp.broadcast_to(b[:, None], y.shape)  # B[k] = b replicated
+    zero = jnp.zeros_like(y)  # the Zero matrix (lines 24-26)
+    z = gb.mxm(w, y, PLUS_TIMES)  # line 30
+    z = gb.ewise_mult(z, bias, MAX_PLUS)  # line 31: ⊗ = +
+    z = gb.ewise_add(z, zero, MAX_PLUS)  # line 32: ⊕ = max
+    return z
+
+
+def dnn_forward(
+    weights: Sequence[Weight],
+    biases: Sequence[Array],
+    y0: Array,
+    *,
+    fused: bool = True,
+) -> Array:
+    """Full L-layer forward pass (the paper's ``dnn()`` function)."""
+    y = y0
+    for w, b in zip(weights, biases):
+        y = dnn_layer(w, y, b, fused=fused)
+    return y
+
+
+def dnn_forward_all(
+    weights: Sequence[Weight],
+    biases: Sequence[Array],
+    y0: Array,
+    *,
+    fused: bool = True,
+) -> list[Array]:
+    """Forward pass returning every Y[k] (the paper's Y[0..L] array)."""
+    ys = [y0]
+    for w, b in zip(weights, biases):
+        ys.append(dnn_layer(w, ys[-1], b, fused=fused))
+    return ys
+
+
+def dnn_forward_scan(
+    stacked_weights: Weight,
+    stacked_biases: Array,
+    y0: Array,
+    *,
+    fused: bool = True,
+) -> Array:
+    """Scanned forward for homogeneous stacks.
+
+    ``stacked_weights``: dense (L, m, m) array or a BlockSparseMatrix
+    pytree whose leaves carry a leading L axis; ``stacked_biases``
+    (L, m). One layer body in the HLO regardless of L.
+    """
+
+    def body(y, layer):
+        w, b = layer
+        return dnn_layer(w, y, b, fused=fused), None
+
+    y, _ = jax.lax.scan(body, y0, (stacked_weights, stacked_biases))
+    return y
+
+
+def stack_bsr(mats: Sequence[BlockSparseMatrix]) -> BlockSparseMatrix:
+    """Stack same-topology-shape BSR matrices along a new leading axis so
+    they can be scanned over (weights of a deep sparse DNN)."""
+    first = mats[0]
+    for m in mats[1:]:
+        if (
+            m.shape != first.shape
+            or m.block_shape != first.block_shape
+            or m.max_blocks_per_row != first.max_blocks_per_row
+        ):
+            raise ValueError("stack_bsr requires homogeneous BSR structure")
+    return BlockSparseMatrix(
+        jnp.stack([m.blocks for m in mats]),
+        jnp.stack([m.col_idx for m in mats]),
+        jnp.stack([m.block_mask for m in mats]),
+        first.shape,
+        first.block_shape,
+    )

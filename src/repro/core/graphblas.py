@@ -1,0 +1,180 @@
+"""GraphBLAS primitive set in JAX (paper §II, §IV).
+
+Implements the operations the paper's Fig. 4 C code uses — ``mxm``,
+``eWiseMult``, ``eWiseAdd`` — plus the rest of the standard primitive set
+(``mxv``/``vxm``, ``apply``, ``reduce``, ``select``, ``extract``,
+``assign``, ``transpose``) with GraphBLAS-style masks and accumulators.
+
+Dense arrays and :class:`repro.sparse.bsr.BlockSparseMatrix` operands are
+both accepted where meaningful; sparse × dense products dispatch to the
+BSR path (jnp oracle here; the Pallas kernel lives in
+``repro.kernels.bsr_spmm`` and is selected by ``repro.kernels.ops``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import PLUS_TIMES, Semiring
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+MatrixLike = Union[Array, BlockSparseMatrix]
+
+
+def _apply_mask_and_accum(
+    out: Array,
+    prev: Optional[Array],
+    mask: Optional[Array],
+    accum: Optional[Callable[[Array, Array], Array]],
+) -> Array:
+    """GraphBLAS output rule: out = mask ? accum(prev, out) : prev."""
+    if accum is not None:
+        if prev is None:
+            raise ValueError("accum requires a previous output value")
+        out = accum(prev, out)
+    if mask is not None:
+        base = prev if prev is not None else jnp.zeros_like(out)
+        out = jnp.where(mask, out, base)
+    return out
+
+
+def mxm(
+    a: MatrixLike,
+    b: Array,
+    semiring: Semiring = PLUS_TIMES,
+    *,
+    mask: Optional[Array] = None,
+    accum: Optional[Callable[[Array, Array], Array]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """C = A ⊕.⊗ B  (GrB_mxm).
+
+    ``a`` may be dense or BSR; ``b`` is dense (the paper keeps Y dense,
+    §V-B: "we only consider dense Y matrices").
+    """
+    if isinstance(a, BlockSparseMatrix):
+        from repro.sparse import ops as sparse_ops
+
+        out = sparse_ops.bsr_matmul(a, b, semiring=semiring)
+    else:
+        out = semiring.matmul(a, b)
+    return _apply_mask_and_accum(out, prev, mask, accum)
+
+
+def mxv(
+    a: MatrixLike,
+    v: Array,
+    semiring: Semiring = PLUS_TIMES,
+    *,
+    mask: Optional[Array] = None,
+    accum: Optional[Callable[[Array, Array], Array]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """w = A ⊕.⊗ v (GrB_mxv)."""
+    out = mxm(a, v[:, None], semiring)[:, 0]
+    return _apply_mask_and_accum(out, prev, mask, accum)
+
+
+def vxm(
+    v: Array,
+    a: MatrixLike,
+    semiring: Semiring = PLUS_TIMES,
+    *,
+    mask: Optional[Array] = None,
+    accum: Optional[Callable[[Array, Array], Array]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """wᵀ = vᵀ ⊕.⊗ A (GrB_vxm)."""
+    if isinstance(a, BlockSparseMatrix):
+        from repro.sparse import ops as sparse_ops
+
+        out = sparse_ops.bsr_matmul(a.transpose(), v[:, None], semiring)[:, 0]
+    else:
+        out = semiring.vecmat(v, a)
+    return _apply_mask_and_accum(out, prev, mask, accum)
+
+
+def ewise_mult(
+    a: Array,
+    b: Array,
+    semiring: Semiring = PLUS_TIMES,
+    *,
+    mask: Optional[Array] = None,
+    accum: Optional[Callable[[Array, Array], Array]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """C(i,j) = A(i,j) ⊗ B(i,j) — intersection semantics (GrB_eWiseMult).
+
+    In the paper's DNN (Fig. 4 line 31) this is the *max-plus* ⊗ = +,
+    i.e. the bias add.
+    """
+    out = semiring.mul(a, b)
+    return _apply_mask_and_accum(out, prev, mask, accum)
+
+
+def ewise_add(
+    a: Array,
+    b: Array,
+    semiring: Semiring = PLUS_TIMES,
+    *,
+    mask: Optional[Array] = None,
+    accum: Optional[Callable[[Array, Array], Array]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """C(i,j) = A(i,j) ⊕ B(i,j) — union semantics (GrB_eWiseAdd).
+
+    In the paper's DNN (Fig. 4 line 32) this is the *max-plus* ⊕ = max
+    against the Zero matrix, i.e. the ReLU.
+    """
+    out = semiring.add(a, b)
+    return _apply_mask_and_accum(out, prev, mask, accum)
+
+
+def apply(
+    a: Array,
+    unary_op: Callable[[Array], Array],
+    *,
+    mask: Optional[Array] = None,
+    accum: Optional[Callable[[Array, Array], Array]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """C = f(A) elementwise (GrB_apply)."""
+    out = unary_op(a)
+    return _apply_mask_and_accum(out, prev, mask, accum)
+
+
+def reduce_rows(
+    a: Array, semiring: Semiring = PLUS_TIMES, *, axis: int = -1
+) -> Array:
+    """w(i) = ⊕_j A(i,j) (GrB_reduce to vector)."""
+    return semiring.add_reduce(a, axis=axis)
+
+
+def reduce_scalar(a: Array, semiring: Semiring = PLUS_TIMES) -> Array:
+    """s = ⊕_{ij} A(i,j) (GrB_reduce to scalar)."""
+    return semiring.add_reduce(a)
+
+
+def select(a: Array, predicate: Callable[[Array], Array], fill=0.0) -> Array:
+    """C = A where predicate(A), else the semiring zero (GrB_select)."""
+    return jnp.where(predicate(a), a, jnp.asarray(fill, a.dtype))
+
+
+def transpose(a: MatrixLike) -> MatrixLike:
+    if isinstance(a, BlockSparseMatrix):
+        return a.transpose()
+    return a.T
+
+
+def extract(a: Array, rows: Array, cols: Array) -> Array:
+    """C = A(rows, cols) (GrB_extract)."""
+    return a[jnp.ix_(rows, cols)]
+
+
+def assign(a: Array, rows: Array, cols: Array, value: Array) -> Array:
+    """A(rows, cols) = value (GrB_assign); functional — returns new array."""
+    return a.at[jnp.ix_(rows, cols)].set(value)

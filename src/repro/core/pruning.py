@@ -1,0 +1,139 @@
+"""Weight sparsification (Deep Compression style — the pipeline the paper
+assumes, §I: "train with a full matrix, remove small weights, retrain").
+
+Two granularities:
+
+* ``magnitude_prune`` — element granularity, the paper/Han-et-al. scheme.
+  Useful on CPU/CSR; on TPU it only helps memory if it survives at block
+  granularity, so:
+* ``block_prune`` — block granularity (MXU tile), scoring each block by a
+  norm and keeping the top ``blocks_per_row`` per block-row (ELL-regular,
+  matching :class:`BlockSparseMatrix`). This is the TPU-native analogue
+  (DESIGN.md §2).
+
+``PruneSchedule`` drives iterative prune→retrain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+
+def magnitude_prune(w: Array, density: float) -> Array:
+    """Zero all but the top ``density`` fraction of |w| (global threshold)."""
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    k = max(1, int(round(w.size * density)))
+    thresh = jnp.sort(jnp.abs(w).ravel())[-k]
+    return jnp.where(jnp.abs(w) >= thresh, w, 0.0)
+
+
+def prune_mask(w: Array, density: float) -> Array:
+    """Boolean keep-mask for ``magnitude_prune`` (for masked retraining)."""
+    k = max(1, int(round(w.size * density)))
+    thresh = jnp.sort(jnp.abs(w).ravel())[-k]
+    return jnp.abs(w) >= thresh
+
+
+def block_scores(
+    w: Array, block_shape: tuple[int, int], *, norm: str = "l1"
+) -> Array:
+    m, n = w.shape
+    bs_r, bs_c = block_shape
+    tiles = w.reshape(m // bs_r, bs_r, n // bs_c, bs_c).transpose(0, 2, 1, 3)
+    if norm == "l1":
+        return jnp.sum(jnp.abs(tiles), axis=(2, 3))
+    if norm == "l2":
+        return jnp.sqrt(jnp.sum(tiles * tiles, axis=(2, 3)))
+    if norm == "linf":
+        return jnp.max(jnp.abs(tiles), axis=(2, 3))
+    raise ValueError(f"unknown norm {norm!r}")
+
+
+def block_prune_mask(
+    w: Array,
+    block_shape: tuple[int, int],
+    blocks_per_row: int,
+    *,
+    norm: str = "l1",
+) -> Array:
+    """(n_row_blocks, n_col_blocks) bool mask keeping the top
+    ``blocks_per_row`` blocks of each block-row by ``norm``."""
+    scores = block_scores(w, block_shape, norm=norm)
+    ncb = scores.shape[1]
+    if blocks_per_row > ncb:
+        raise ValueError(f"blocks_per_row {blocks_per_row} > {ncb}")
+    order = jnp.argsort(-scores, axis=1)
+    keep_cols = order[:, :blocks_per_row]
+    mask = jnp.zeros_like(scores, dtype=bool)
+    rows = jnp.broadcast_to(
+        jnp.arange(scores.shape[0])[:, None], keep_cols.shape
+    )
+    return mask.at[rows, keep_cols].set(True)
+
+
+def block_prune(
+    w: Array,
+    block_shape: tuple[int, int],
+    blocks_per_row: int,
+    *,
+    norm: str = "l1",
+) -> BlockSparseMatrix:
+    """Prune ``w`` to an ELL-regular BSR matrix (host-side)."""
+    import numpy as np
+
+    mask = np.asarray(
+        block_prune_mask(w, block_shape, blocks_per_row, norm=norm)
+    )
+    m, n = w.shape
+    bs_r, bs_c = block_shape
+    tiles = np.asarray(w).reshape(m // bs_r, bs_r, n // bs_c, bs_c)
+    tiles = tiles.transpose(0, 2, 1, 3).copy()
+    tiles[~mask] = 0.0
+    dense = tiles.transpose(0, 2, 1, 3).reshape(m, n)
+    return BlockSparseMatrix.from_dense(
+        dense, block_shape, pad_to=blocks_per_row
+    )
+
+
+def apply_block_mask(w: Array, mask: Array, block_shape: tuple[int, int]) -> Array:
+    """Zero out masked-off blocks of a dense ``w`` (masked retraining)."""
+    m, n = w.shape
+    bs_r, bs_c = block_shape
+    full = jnp.repeat(jnp.repeat(mask, bs_r, axis=0), bs_c, axis=1)
+    return jnp.where(full, w, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSchedule:
+    """Iterative prune→retrain: at ``steps[i]`` reduce density to
+    ``densities[i]`` (monotonically decreasing), then keep training with
+    the mask frozen (gradient masking handled by the caller's train step).
+    """
+
+    steps: Sequence[int]
+    densities: Sequence[float]
+
+    def __post_init__(self):
+        if len(self.steps) != len(self.densities):
+            raise ValueError("steps and densities must align")
+        if list(self.densities) != sorted(self.densities, reverse=True):
+            raise ValueError("densities must be non-increasing")
+
+    def density_at(self, step: int) -> float:
+        d = 1.0
+        for s, dens in zip(self.steps, self.densities):
+            if step >= s:
+                d = dens
+        return d
+
+    def is_prune_step(self, step: int) -> bool:
+        return step in set(self.steps)

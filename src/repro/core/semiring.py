@@ -1,0 +1,184 @@
+"""Semiring algebra — the mathematical core of the GraphBLAS (paper §II).
+
+A semiring bundles an additive monoid (⊕, 0̸) and a multiplicative
+operation (⊗, 1̂) such that ⊕ is commutative/associative, ⊗ is
+associative, ⊗ distributes over ⊕, 0̸ is the additive identity and the
+multiplicative annihilator (a ⊗ 0̸ = 0̸). Those properties are exactly
+what lets a GraphBLAS implementation skip stored zeros — the basis of the
+paper's sparse-DNN argument.
+
+Semirings here are *static* objects (hashable, usable as jit static
+arguments). ``add``/``mul`` operate on jnp arrays elementwise;
+``matmul(A, B)`` is the generalized product  C(i,j) = ⊕_k A(i,k) ⊗ B(k,j).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (⊕, ⊗, 0̸, 1̂) semiring over jnp scalars/arrays.
+
+    Attributes:
+      name: stable identifier (used for kernel dispatch + caching).
+      add: commutative associative binary op (the monoid ⊕).
+      mul: binary op ⊗ distributing over ⊕.
+      zero: additive identity / multiplicative annihilator 0̸.
+      one: multiplicative identity 1̂ (None if the semiring has none).
+      add_reduce: reduction form of ⊕ along an axis.
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: float
+    one: float | None
+    add_reduce: Callable[..., Array]
+
+    def __hash__(self) -> int:  # static-arg friendliness
+        return hash(self.name)
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, Semiring) and other.name == self.name
+
+    # --- generalized linear algebra -------------------------------------
+    def matmul(self, a: Array, b: Array) -> Array:
+        """C = A ⊕.⊗ B  (paper §II-D). Shapes: (..., m, l) × (..., l, n)."""
+        if self.name == "plus_times":
+            # Fast path: the arithmetic semiring IS jnp.matmul (MXU path).
+            return jnp.matmul(a, b)
+        # General path: broadcast ⊗ then ⊕-reduce the contraction axis.
+        # a: (..., m, l) -> (..., m, l, 1); b: (..., l, n) -> (..., 1, l, n)
+        prod = self.mul(a[..., :, :, None], b[..., None, :, :])
+        return self.add_reduce(prod, axis=-2)
+
+    def vecmat(self, v: Array, a: Array) -> Array:
+        """vᵀ A over the semiring (GraphBLAS vxm)."""
+        return self.matmul(v[None, :], a)[0]
+
+    def matvec(self, a: Array, v: Array) -> Array:
+        """A v over the semiring (GraphBLAS mxv)."""
+        return self.matmul(a, v[:, None])[..., 0]
+
+
+# --- The standard semirings used by the paper & the GraphBLAS spec -------
+
+PLUS_TIMES = Semiring(
+    name="plus_times",
+    add=jnp.add,
+    mul=jnp.multiply,
+    zero=0.0,
+    one=1.0,
+    add_reduce=jnp.sum,
+)
+"""S1 = (ℝ, +, ×, 0, 1): standard arithmetic — correlation of inputs."""
+
+MAX_PLUS = Semiring(
+    name="max_plus",
+    add=jnp.maximum,
+    mul=jnp.add,
+    zero=-jnp.inf,
+    one=0.0,
+    add_reduce=jnp.max,
+)
+"""S2 = ({-∞}∪ℝ, max, +, -∞, 0): optimal-path selection; carries ReLU."""
+
+MIN_PLUS = Semiring(
+    name="min_plus",
+    add=jnp.minimum,
+    mul=jnp.add,
+    zero=jnp.inf,
+    one=0.0,
+    add_reduce=jnp.min,
+)
+"""Tropical shortest-path semiring."""
+
+MAX_MIN = Semiring(
+    name="max_min",
+    add=jnp.maximum,
+    mul=jnp.minimum,
+    zero=-jnp.inf,
+    one=jnp.inf,
+    add_reduce=jnp.max,
+)
+"""Bottleneck-path semiring."""
+
+MIN_MAX = Semiring(
+    name="min_max",
+    add=jnp.minimum,
+    mul=jnp.maximum,
+    zero=jnp.inf,
+    one=-jnp.inf,
+    add_reduce=jnp.min,
+)
+
+LOR_LAND = Semiring(
+    name="lor_land",
+    add=jnp.logical_or,
+    mul=jnp.logical_and,
+    zero=0.0,  # False
+    one=1.0,  # True
+    add_reduce=jnp.any,
+)
+"""Boolean reachability semiring."""
+
+XOR_AND = Semiring(
+    name="xor_and",
+    add=jnp.logical_xor,
+    mul=jnp.logical_and,
+    zero=0.0,
+    one=1.0,
+    add_reduce=lambda x, axis=None, keepdims=False: jnp.sum(
+        x.astype(jnp.int32), axis=axis, keepdims=keepdims
+    )
+    % 2
+    == 1,
+)
+"""GF(2) — finite-field semiring from paper §II-C."""
+
+
+def logsumexp_reduce(x: Array, axis=None, keepdims: bool = False) -> Array:
+    return jax.nn.logsumexp(x, axis=axis, keepdims=keepdims)
+
+
+LOG_PLUS = Semiring(
+    name="log_plus",
+    add=jnp.logaddexp,
+    mul=jnp.add,
+    zero=-jnp.inf,
+    one=0.0,
+    add_reduce=logsumexp_reduce,
+)
+"""Log-probability semiring (smooth max-plus) — useful for CRF/HMM layers."""
+
+
+REGISTRY: dict[str, Semiring] = {
+    s.name: s
+    for s in (
+        PLUS_TIMES,
+        MAX_PLUS,
+        MIN_PLUS,
+        MAX_MIN,
+        MIN_MAX,
+        LOR_LAND,
+        XOR_AND,
+        LOG_PLUS,
+    )
+}
+
+
+def get_semiring(name: str) -> Semiring:
+    try:
+        return REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown semiring {name!r}; available: {sorted(REGISTRY)}"
+        ) from e

@@ -1,0 +1,6 @@
+from repro.distribution.sharding import (  # noqa: F401
+    ShardingRules,
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+)

@@ -1,0 +1,98 @@
+"""Distributed-optimization collectives (DESIGN.md §5/§6).
+
+``compressed_psum_mean`` — int8 error-feedback gradient all-reduce for the
+cross-pod DP axis: each participant transmits an int8 quantized gradient
+plus one fp32 scale; quantization error is carried locally and re-added
+next step (error feedback keeps SGD/Adam convergence — 1-bit Adam /
+PowerSGD lineage). On real hardware this moves 4× fewer bytes over the
+pod-to-pod DCI; here the semantics are emulated inside shard_map with an
+int32 ``psum`` of the int8 payload (noted in EXPERIMENTS.md — the traffic
+claim is structural, the *numerics* are exact to the deployed scheme).
+
+``bucketed`` — flatten a gradient pytree into fixed-size buckets so the
+all-reduce launches overlap with the backward pass instead of waiting for
+the full gradient (the classic DDP bucketing trick; under XLA this also
+keeps each collective's payload in the latency-optimal range).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ----------------------- int8 error-feedback psum ----------------------------
+
+
+def quantize_int8(x: Array, axis_name: str) -> tuple[Array, Array]:
+    """Symmetric int8 quantization with a *shared* (pmax'd) scale so the
+    reduced sum can be reconstructed without exchanging per-peer scales."""
+    amax = jnp.max(jnp.abs(x))
+    amax = jax.lax.pmax(amax, axis_name)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_mean(
+    x: Array, axis_name: str, err: Array
+) -> tuple[Array, Array]:
+    """Mean-reduce ``x`` over ``axis_name`` transmitting int8 payloads.
+
+    Returns (mean, new_error). Call inside ``shard_map``.
+    """
+    n = jax.lax.axis_size(axis_name)
+    xe = x + err
+    q, scale = quantize_int8(xe, axis_name)
+    dequant_local = q.astype(x.dtype) * scale
+    new_err = xe - dequant_local
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    mean = total.astype(x.dtype) * (scale / n)
+    return mean, new_err
+
+
+def compressed_psum_mean_tree(
+    grads: Any, axis_name: str, err_tree: Any
+) -> tuple[Any, Any]:
+    """Tree version; error state mirrors the gradient pytree."""
+    flat, treedef = jax.tree.flatten(grads)
+    errs = treedef.flatten_up_to(err_tree)
+    out, new_errs = [], []
+    for g, e in zip(flat, errs):
+        m, ne = compressed_psum_mean(g, axis_name, e)
+        out.append(m)
+        new_errs.append(ne)
+    return treedef.unflatten(out), treedef.unflatten(new_errs)
+
+
+def init_error_state(grads_shape: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if hasattr(s, "shape")
+        else jnp.zeros_like(s),
+        grads_shape,
+    )
+
+
+# ------------------------------ bucketing ------------------------------------
+
+
+def bucketed(tree: Any, bucket_bytes: int = 32 * 1024 * 1024) -> list[list]:
+    """Group pytree leaves into ≤bucket_bytes groups (reduction launch
+    granularity). Returns a list of lists of (path, leaf)."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    buckets, cur, cur_bytes = [], [], 0
+    for path, leaf in leaves:
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append((path, leaf))
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(cur)
+    return buckets

@@ -1,0 +1,142 @@
+"""Block-sparse (ELL-padded BSR) × dense Pallas TPU kernel.
+
+The TPU-native port of the paper's CSR SpMM (DESIGN.md §2): each stored
+nonzero *block* becomes one dense MXU matmul; the block-column index table
+is scalar-prefetched into SMEM and drives the B-panel gather via the
+BlockSpec ``index_map`` (so the HBM→VMEM DMA only ever touches B panels
+that are actually needed — compute AND bandwidth scale with nnz blocks).
+
+grid = (row_blocks, n_tiles, max_blocks_per_row):
+  t-axis walks the stored blocks of row-block i; the (i, j) output tile
+  accumulates in VMEM scratch; invalid (padding) slots are skipped via
+  ``block_mask`` + ``pl.when``. The final t-step applies the optional
+  fused max-plus epilogue  max(acc + bias, 0)  — the paper's eWiseMult +
+  eWiseAdd collapsed into the matmul's last store.
+
+Semirings: ``plus_times`` (MXU) and ``max_plus`` (VPU, chunked) — the two
+semirings of the paper's §III.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.semiring_matmul import _VPU_SEMIRINGS, _vpu_tile_product
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+
+def _kernel(
+    col_idx_ref,  # scalar-prefetch (nrb, mbpr) int32
+    mask_ref,  # scalar-prefetch (nrb, mbpr) int32
+    blocks_ref,  # (1, 1, bs_r, bs_c)
+    b_ref,  # (bs_c, bn)
+    bias_ref,  # (bs_r, 1)
+    o_ref,  # (bs_r, bn)
+    acc_ref,  # VMEM scratch (bs_r, bn) f32
+    *,
+    semiring_name: str,
+    t_steps: int,
+    fuse_bias_relu: bool,
+):
+    i = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        if semiring_name == "plus_times":
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            acc_ref[...] = jnp.full_like(
+                acc_ref, _VPU_SEMIRINGS[semiring_name][2]
+            )
+
+    @pl.when(mask_ref[i, t] != 0)
+    def _accumulate():
+        a = blocks_ref[0, 0].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        if semiring_name == "plus_times":
+            acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+        else:
+            acc_ref[...] = _vpu_tile_product(semiring_name, a, b, acc_ref[...])
+
+    @pl.when(t == t_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if fuse_bias_relu:
+            acc = jnp.maximum(acc + bias_ref[...].astype(jnp.float32), 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def bsr_spmm(
+    a: BlockSparseMatrix,
+    b: Array,
+    *,
+    semiring_name: str = "plus_times",
+    bias: Array | None = None,
+    fuse_bias_relu: bool = False,
+    block_n: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> Array:
+    """C (m, n) = A ⊕.⊗ B for ELL-padded BSR A (m, k), dense B (k, n)."""
+    m, k = a.shape
+    assert b.shape[0] == k, (a.shape, b.shape)
+    n = b.shape[1]
+    bs_r, bs_c = a.block_shape
+    nrb, mbpr = a.col_idx.shape
+    assert n % block_n == 0, (n, block_n)
+    if fuse_bias_relu and bias is None:
+        raise ValueError("fuse_bias_relu requires bias")
+    if semiring_name != "plus_times" and semiring_name not in _VPU_SEMIRINGS:
+        raise NotImplementedError(semiring_name)
+    if bias is None:
+        bias = jnp.zeros((m,), jnp.float32)
+    bias2d = bias[:, None]
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+
+    kernel = functools.partial(
+        _kernel,
+        semiring_name=semiring_name,
+        t_steps=mbpr,
+        fuse_bias_relu=fuse_bias_relu,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nrb, n // block_n, mbpr),
+        in_specs=[
+            # stored block (i, t)
+            pl.BlockSpec(
+                (1, 1, bs_r, bs_c), lambda i, j, t, ci, mk: (i, t, 0, 0)
+            ),
+            # B panel selected by the scalar-prefetched block-column index
+            pl.BlockSpec((bs_c, block_n), lambda i, j, t, ci, mk: (ci[i, t], j)),
+            # bias row-tile
+            pl.BlockSpec((bs_r, 1), lambda i, j, t, ci, mk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bs_r, block_n), lambda i, j, t, ci, mk: (i, j)
+        ),
+        scratch_shapes=[pltpu.VMEM((bs_r, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(
+        a.col_idx,
+        a.block_mask.astype(jnp.int32),
+        a.blocks,
+        b,
+        bias2d,
+    )

@@ -1,0 +1,132 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this container is
+CPU-only) they run in ``interpret=True`` mode, which executes the kernel
+body in Python/XLA-CPU for correctness validation. ``auto_interpret()``
+makes that decision once.
+
+Wrappers also handle shape padding to the kernel block grid, so callers
+can pass arbitrary (m, k, n).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import semiring_matmul as _smm
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+
+@functools.cache
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, axis: int, mult: int, fill: float = 0.0) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "semiring_name",
+        "fuse_bias_relu",
+        "block_m",
+        "block_n",
+        "block_k",
+        "interpret",
+    ),
+)
+def semiring_matmul(
+    a: Array,
+    b: Array,
+    bias: Array | None = None,
+    *,
+    semiring_name: str = "plus_times",
+    fuse_bias_relu: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """Padded, jit'd ``C = A ⊕.⊗ B`` (+ optional fused bias/ReLU)."""
+    interpret = auto_interpret() if interpret is None else interpret
+    m, k = a.shape
+    n = b.shape[1]
+    block_m = min(block_m, _ceil_mult(m))
+    block_n = min(block_n, _ceil_mult(n))
+    block_k = min(block_k, _ceil_mult(k))
+    sr_zero = 0.0 if semiring_name == "plus_times" else (
+        _smm._VPU_SEMIRINGS[semiring_name][2]
+    )
+    ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k, fill=sr_zero)
+    bp = _pad_to(_pad_to(b, 0, block_k, fill=sr_zero), 1, block_n)
+    # NOTE: for plus_times zero-padding is exact. For max/min semirings the
+    # ⊗ over padded k-entries uses the ⊕-identity so it cannot win the
+    # reduction either.
+    bias_p = None
+    if bias is not None:
+        bias_p = _pad_to(bias, 0, block_m)
+    out = _smm.semiring_matmul(
+        ap,
+        bp,
+        semiring_name=semiring_name,
+        bias=bias_p,
+        fuse_bias_relu=fuse_bias_relu,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def _ceil_mult(size: int, base: int = 8) -> int:
+    """Largest power-of-two block ≤ 128 that keeps padding small."""
+    b = 128
+    while b > base and size < b:
+        b //= 2
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("semiring_name", "fuse_bias_relu", "block_n", "interpret"),
+)
+def bsr_spmm(
+    a: BlockSparseMatrix,
+    b: Array,
+    bias: Array | None = None,
+    *,
+    semiring_name: str = "plus_times",
+    fuse_bias_relu: bool = False,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """Padded, jit'd block-sparse ``C = A ⊕.⊗ B`` (+ fused epilogue)."""
+    interpret = auto_interpret() if interpret is None else interpret
+    n = b.shape[1]
+    block_n = min(block_n, _ceil_mult(n))
+    bp = _pad_to(b, 1, block_n)
+    out = _bsr.bsr_spmm(
+        a,
+        bp,
+        semiring_name=semiring_name,
+        bias=bias,
+        fuse_bias_relu=fuse_bias_relu,
+        block_n=block_n,
+        interpret=interpret,
+    )
+    return out[:, :n]

@@ -1,0 +1,155 @@
+"""Dense semiring matmul Pallas TPU kernel (paper §II-D / §III).
+
+Computes ``C = A ⊕.⊗ B`` (+ optional fused max-plus bias/ReLU epilogue)
+with explicit VMEM tiling:
+
+* grid = (m/bm, n/bn, k/bk); the (i, j) output tile lives in a VMEM f32
+  scratch accumulator across the k-steps (classic revisiting pattern).
+* ``plus_times`` uses the MXU (``jnp.dot`` with f32 accumulation).
+* max-plus / min-plus / max-min / min-max tile products run on the VPU;
+  the (bm, bk, bn) broadcast is chunked along k (``_K_CHUNK``) so the
+  working set stays ≪ VMEM:  bm·bn·4  +  bm·chunk·bn·4 bytes.
+
+TARGET is TPU; on CPU this file is exercised via ``interpret=True``
+(see ``repro.kernels.ops``), checked against ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_K_CHUNK = 8  # k-slab for VPU semiring tile products
+
+# name -> (elementwise ⊗, elementwise ⊕, accumulator init)
+_VPU_SEMIRINGS = {
+    "max_plus": (jnp.add, jnp.maximum, -jnp.inf),
+    "min_plus": (jnp.add, jnp.minimum, jnp.inf),
+    "max_min": (jnp.minimum, jnp.maximum, -jnp.inf),
+    "min_max": (jnp.maximum, jnp.minimum, jnp.inf),
+}
+
+
+def _vpu_tile_product(name: str, a: Array, b: Array, acc: Array) -> Array:
+    """acc ⊕= A_tile ⊗-contract B_tile for a VPU semiring."""
+    mul, add, _ = _VPU_SEMIRINGS[name]
+    bk = a.shape[1]
+    n_chunks = bk // _K_CHUNK
+
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, c * _K_CHUNK, _K_CHUNK, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, c * _K_CHUNK, _K_CHUNK, axis=0)
+        prod = mul(a_c[:, :, None], b_c[None, :, :])  # (bm, chunk, bn)
+        return add(acc, add_reduce_axis1(prod, add))
+
+    return jax.lax.fori_loop(0, n_chunks, body, acc)
+
+
+def add_reduce_axis1(x: Array, add) -> Array:
+    if add is jnp.maximum:
+        return jnp.max(x, axis=1)
+    if add is jnp.minimum:
+        return jnp.min(x, axis=1)
+    raise NotImplementedError
+
+
+def _kernel(
+    a_ref,
+    b_ref,
+    bias_ref,
+    o_ref,
+    acc_ref,
+    *,
+    semiring_name: str,
+    k_steps: int,
+    fuse_bias_relu: bool,
+):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        if semiring_name == "plus_times":
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            init = _VPU_SEMIRINGS[semiring_name][2]
+            acc_ref[...] = jnp.full_like(acc_ref, init)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    if semiring_name == "plus_times":
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] = _vpu_tile_product(semiring_name, a, b, acc_ref[...])
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if fuse_bias_relu:
+            # max-plus pass of the paper fused in: max(acc + bias, 0).
+            acc = jnp.maximum(acc + bias_ref[...].astype(jnp.float32), 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def semiring_matmul(
+    a: Array,
+    b: Array,
+    *,
+    semiring_name: str = "plus_times",
+    bias: Array | None = None,
+    fuse_bias_relu: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> Array:
+    """C = A ⊕.⊗ B with optional fused ``max(C + bias, 0)`` epilogue.
+
+    a: (m, k); b: (k, n); bias: (m,) broadcast along n (paper's B[k]).
+    m/k/n must divide the block sizes (wrappers in ``ops.py`` pad).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k),
+        (block_m, block_n, block_k),
+    )
+    if semiring_name != "plus_times" and semiring_name not in _VPU_SEMIRINGS:
+        raise NotImplementedError(semiring_name)
+    if fuse_bias_relu and bias is None:
+        raise ValueError("fuse_bias_relu requires bias")
+    if bias is None:
+        bias = jnp.zeros((m,), jnp.float32)
+    bias2d = bias[:, None]  # (m, 1) so the tile is (block_m, 1)
+
+    k_steps = k // block_k
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    kernel = functools.partial(
+        _kernel,
+        semiring_name=semiring_name,
+        k_steps=k_steps,
+        fuse_bias_relu=fuse_bias_relu,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b, bias2d)

@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST precede any jax import
+# (jax locks the device count at first init; see MULTI-POD DRY-RUN spec).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+emit the roofline inputs (memory analysis, per-device FLOPs/bytes,
+per-device collective wire bytes) as JSON artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun --summary   # table from saved artifacts
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPE_CELLS, get_config
+from repro.distribution.sharding import ShardingRules, shardings_for
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_plan, model_flops, skip_reason
+
+OUT_DEFAULT = "experiments/dryrun"
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool,
+    rules: ShardingRules | None = None,
+    microbatches: int | None = None,
+    save_hlo: str | None = None,
+) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    base = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "kind": cell.kind,
+    }
+    reason = skip_reason(cfg, cell)
+    if reason:
+        return {**base, "status": "skipped", "reason": reason}
+
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(arch, shape, mesh, rules=rules, microbatches=microbatches)
+    from repro.distribution.sharding import activate
+
+    with mesh, activate(mesh, rules):
+        jitted = jax.jit(
+            plan.fn,
+            in_shardings=shardings_for(plan.args, mesh, plan.in_shardings),
+            out_shardings=shardings_for(None, mesh, plan.out_shardings),
+            donate_argnums=plan.donate_argnums,
+        )
+        lowered = jitted.lower(*plan.args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    trip = max(cfg.n_periods, 1)
+    stats = hlo_analysis.analyze(hlo, default_trip_count=trip)
+    n_chips = mesh.devices.size
+    flops_dev = stats.flops
+    bytes_dev = stats.bytes_accessed
+    terms = hlo_analysis.roofline_terms(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=stats.collective_bytes,
+    )
+    mf = model_flops(arch, shape)
+    useful = mf["model_flops"] / max(flops_dev * n_chips, 1.0)
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "code_bytes": ma.generated_code_size_in_bytes,
+        "peak_per_device_bytes": (
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        ),
+    }
+    return {
+        **base,
+        "status": "ok",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "cost_analysis_raw": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; see hlo_analysis.py",
+        },
+        "collectives": {
+            "per_kind_bytes": stats.per_kind_bytes,
+            "per_kind_count": stats.per_kind_count,
+            "total_bytes": stats.collective_bytes,
+            "largest": stats.largest_collectives[:6],
+        },
+        "memory": mem,
+        "roofline": terms,
+        "model_flops": mf["model_flops"],
+        "n_active_params": mf["n_active"],
+        "useful_flops_fraction": useful,
+        "static": plan.static,
+    }
+
+
+def cell_list(which: str):
+    for arch in ARCHS:
+        for shape in SHAPE_CELLS:
+            if which == "all" or which == arch:
+                yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence parallelism: shard the token dim over 'model'")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--summary", action="store_true")
+    args = ap.parse_args()
+
+    if args.summary:
+        summarize(args.out)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = list(cell_list("all"))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = os.path.join(args.out, tag + ".json")
+            rules = (
+                ShardingRules(seq_axis="model") if args.seq_shard else None
+            )
+            try:
+                rec = run_cell(
+                    arch,
+                    shape,
+                    multi_pod=multi_pod,
+                    rules=rules,
+                    microbatches=args.microbatches,
+                    save_hlo=args.save_hlo,
+                )
+            except Exception as e:  # noqa: BLE001
+                rec = {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": mesh_name,
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (
+                    f" dom={r['dominant']}"
+                    f" frac={r['roofline_fraction']:.3f}"
+                    f" mem={rec['memory']['peak_per_device_bytes']/2**30:.2f}GiB"
+                    f" compile={rec['compile_s']:.0f}s"
+                )
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+def summarize(out_dir: str):
+    rows = []
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, fn)) as f:
+            rows.append(json.load(f))
+    fmt = "{:<22s} {:<12s} {:<10s} {:<8s} {:>9s} {:>9s} {:>9s} {:<12s} {:>6s} {:>8s}"
+    print(
+        fmt.format(
+            "arch", "shape", "mesh", "status",
+            "t_comp", "t_mem", "t_coll", "dominant", "frac", "GiB/dev",
+        )
+    )
+    for r in rows:
+        if r["status"] != "ok":
+            print(
+                fmt.format(
+                    r["arch"], r["shape"], r["mesh"], r["status"],
+                    "-", "-", "-", r.get("reason", r.get("error", ""))[:12], "-", "-",
+                )
+            )
+            continue
+        t = r["roofline"]
+        print(
+            fmt.format(
+                r["arch"], r["shape"], r["mesh"], r["status"],
+                f"{t['t_compute_s']*1e3:.1f}ms",
+                f"{t['t_memory_s']*1e3:.1f}ms",
+                f"{t['t_collective_s']*1e3:.1f}ms",
+                t["dominant"].replace("t_", "").replace("_s", ""),
+                f"{t['roofline_fraction']:.2f}",
+                f"{r['memory']['peak_per_device_bytes']/2**30:.2f}",
+            )
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production meshes (DESIGN.md §5).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import, and everything else (tests, benches) must keep seeing 1 device.
+
+Axis semantics:
+  pod   — outer pure-DP axis; only the per-step gradient reduction
+          crosses it (DCI traffic), never TP/EP collectives.
+  data  — FSDP: batch + parameter/optimizer sharding (intra-pod ICI).
+  model — TP/EP: heads, mlp, experts, vocab shards (intra-pod ICI).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(
+    data: int | None = None, model: int = 1
+) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,217 @@
+"""ShapeDtypeStruct stand-ins + step builders for every (arch × shape)
+cell — the dry-run lowers these with no device allocation.
+
+``input_specs`` mirrors what the data pipeline / serving frontend would
+feed: int32 token ids for LM archs, precomputed bf16 patch/frame
+embeddings for the VLM/audio stubs (their modality frontends are stubs
+per the assignment), plus labels for train cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPE_CELLS, ShapeCell, get_config
+from repro.configs.base import ModelConfig
+from repro.distribution.sharding import (
+    ShardingRules,
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+)
+from repro.models.model import Model
+from repro.serve.engine import make_serve_fns
+from repro.train.optimizer import adamw, warmup_cosine
+from repro.train.trainer import TrainState, make_train_step
+
+Array = jax.Array
+P = jax.sharding.PartitionSpec
+
+# Microbatch counts for train cells (memory lever; global_batch=256).
+# 8 is the divisibility ceiling: global_batch 256 / 8 micro = 32 = the
+# multi-pod DP-shard count (pod×data); finer microbatching would leave
+# per-micro batches unshardable and replicate activations.
+DEFAULT_MICROBATCHES = 8
+MICROBATCH_OVERRIDES: dict[str, int] = {}
+
+
+def skip_reason(cfg: ModelConfig, cell: ShapeCell) -> str | None:
+    """Assigned skip rules (recorded in the roofline table)."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "pure full-attention arch: 500k decode has no sub-quadratic "
+            "path (skip per assignment; see DESIGN.md)"
+        )
+    return None
+
+
+def _token_spec(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.input_mode == "embeddings":
+        return jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(arch: str, shape: str) -> dict[str, Any]:
+    """The raw data-batch specs for one cell (train cells)."""
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    return {
+        "inputs": _token_spec(cfg, cell.global_batch, cell.seq_len),
+        "labels": jax.ShapeDtypeStruct(
+            (cell.global_batch, cell.seq_len), jnp.int32
+        ),
+    }
+
+
+@dataclasses.dataclass
+class LoweringPlan:
+    """Everything jit needs for one cell: fn, arg specs, shardings."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    static: dict
+
+
+def make_plan(
+    arch: str,
+    shape: str,
+    mesh: jax.sharding.Mesh,
+    *,
+    rules: ShardingRules | None = None,
+    microbatches: int | None = None,
+) -> LoweringPlan:
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    reason = skip_reason(cfg, cell)
+    if reason:
+        raise ValueError(f"cell skipped: {reason}")
+    rules = rules or ShardingRules()
+    model = Model(cfg)
+
+    if cell.kind == "train":
+        mb = microbatches or MICROBATCH_OVERRIDES.get(arch, DEFAULT_MICROBATCHES)
+        opt = adamw(
+            warmup_cosine(3e-4, 2000, 100_000),
+            state_dtype=jnp.bfloat16,  # sharded bf16 moments (DESIGN §5)
+        )
+        step_fn = make_train_step(model, opt, microbatches=mb)
+        state_specs = jax.eval_shape(
+            lambda: TrainState(
+                (p := model.init(jax.random.key(0))), opt.init(p)
+            )
+        )
+        batch_specs = {
+            "inputs": _token_spec(cfg, cell.global_batch, cell.seq_len),
+            "labels": jax.ShapeDtypeStruct(
+                (cell.global_batch, cell.seq_len), jnp.int32
+            ),
+        }
+        state_ps = param_pspecs(cfg, state_specs, mesh, rules)
+        batch_ps = jax.tree.map(
+            lambda _: batch_pspecs(mesh, rules)["inputs"], batch_specs
+        )
+        metrics_ps = {k: P() for k in ("ce", "moe_aux", "loss", "grad_norm")}
+        return LoweringPlan(
+            name=f"{arch}/{shape}",
+            fn=step_fn,
+            args=(state_specs, batch_specs),
+            in_shardings=(state_ps, batch_ps),
+            out_shardings=(state_ps, metrics_ps),
+            donate_argnums=(0,),
+            static={"microbatches": mb, "kind": "train"},
+        )
+
+    # serving cells
+    prefill_fn, decode_fn = make_serve_fns(model)
+    params_specs = jax.eval_shape(model.init, jax.random.key(0))
+    params_ps = param_pspecs(cfg, params_specs, mesh, rules)
+    cache_specs = jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, cell.seq_len)
+    )
+    cache_ps = cache_pspecs(cfg, cache_specs, mesh, rules)
+    dp = tuple(a for a in rules.batch_axes if a in mesh.shape)
+    vocab_ax = (
+        rules.tp_axis
+        if rules.shard_vocab
+        and rules.tp_axis in mesh.shape
+        and cfg.vocab_size % mesh.shape[rules.tp_axis] == 0
+        else None
+    )
+    bsz = cell.global_batch
+    dp_ok = dp if bsz % max(
+        1, _prod(mesh.shape[a] for a in dp)
+    ) == 0 else ()
+
+    if cell.kind == "prefill":
+        tok_specs = _token_spec(cfg, bsz, cell.seq_len)
+        logits_ps = P(dp_ok, None, vocab_ax)
+        return LoweringPlan(
+            name=f"{arch}/{shape}",
+            fn=prefill_fn,
+            args=(params_specs, tok_specs, cache_specs),
+            in_shardings=(params_ps, P(dp_ok, None), cache_ps),
+            out_shardings=(logits_ps, cache_ps),
+            donate_argnums=(2,),
+            static={"kind": "prefill"},
+        )
+
+    # decode: one new token against a full cache
+    if cfg.input_mode == "embeddings":
+        tok_specs = jax.ShapeDtypeStruct(
+            (bsz, 1, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+        tok_ps = P(dp_ok, None, None)
+    else:
+        tok_specs = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+        tok_ps = P(dp_ok)
+    pos_specs = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_ps = P(dp_ok, vocab_ax)
+    return LoweringPlan(
+        name=f"{arch}/{shape}",
+        fn=decode_fn,
+        args=(params_specs, tok_specs, cache_specs, pos_specs),
+        in_shardings=(params_ps, tok_ps, cache_ps, P()),
+        out_shardings=(logits_ps, cache_ps),
+        donate_argnums=(2,),
+        static={"kind": "decode"},
+    )
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+def model_flops(arch: str, shape: str) -> dict[str, float]:
+    """MODEL_FLOPS per §Roofline: 6·N·D train, 2·N·D forward-only, with
+    N = active non-embedding params and D = tokens processed."""
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    model = Model(cfg)
+    n_active = model.active_param_count()
+    # exclude embedding + lm head from N (standard 6ND accounting)
+    embed = cfg.vocab_size * cfg.d_model
+    lm = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    if cfg.input_mode == "embeddings":
+        embed = 0
+    n = max(n_active - embed - lm, 0)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return {"model_flops": 6.0 * n * tokens, "n_active": float(n)}
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return {"model_flops": 2.0 * n * tokens, "n_active": float(n)}
+    tokens = cell.global_batch  # one token per sequence
+    return {"model_flops": 2.0 * n * tokens, "n_active": float(n)}

@@ -1,0 +1,595 @@
+"""Attention mixers: GQA (full / sliding-window, QK-norm, bias) and MLA
+(DeepSeek-V2 latent attention) — train, prefill and decode paths.
+
+Decode semantics: the KV cache is a fixed-size buffer (ring buffer for
+windowed layers) with an explicit ``positions`` track; batch entries
+decode at a shared position (the serving engine aligns them). MLA decode
+uses the *absorbed* formulation — only the (kv_lora + rope) latents are
+cached and the up-projections are folded into the query/output sides,
+which is the memory trick that makes 32k×128-head decode feasible.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+Array = jax.Array
+Params = dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+# --- RoPE -------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- shared attention core ---------------------------------------------------
+
+
+def _attend(
+    q: Array,  # (B, T, H, hd)
+    k: Array,  # (B, S, Hkv, hd)
+    v: Array,  # (B, S, Hkv, dv)
+    mask: Array,  # (B, T, S) or (T, S) boolean (True = attend)
+    *,
+    scale: float,
+    q_chunk: int = 1024,
+) -> Array:
+    """Grouped scaled-dot-product attention, f32 softmax, query-chunked so
+    the score matrix never exceeds (chunk × S) per head.
+
+    SPMD posture: KV heads are *repeated* up to the full query-head count
+    (Megatron-style KV replication within the TP group) so every einsum
+    carries one full `h` dim that shards cleanly over the model axis —
+    the grouped (hkv, g) formulation leaves GSPMD unable to shard either
+    sub-dim when hkv < |model| and silently replicates the whole score
+    tensor (16× the FLOPs at mesh 16). ``constrain`` pins the layout;
+    it is a no-op outside an ``activate(mesh)`` scope.
+    """
+    from repro.distribution.sharding import constrain
+
+    b, t, h, _ = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    if mask.ndim == 2:
+        mask = jnp.broadcast_to(mask[None], (b, t, mask.shape[-1]))
+    head_spec = ("batch", None, "tp", None)
+    q = constrain(q, head_spec)
+    k_cast = constrain(k, head_spec)
+    v_cast = constrain(v, head_spec)
+    # working dtype = the compute dtype (bf16 in production). Scores and
+    # probabilities are STORED at working precision — the f32-everywhere
+    # variant doubles attention HBM traffic and the TP collective payloads
+    # (§Perf iteration L1). Softmax normalization still happens in f32.
+    wdt = q.dtype
+
+    def block(args):
+        qb, mb = args  # (B, tc, H, hd), (B, tc, S)
+        scores = jnp.einsum(
+            "bthd,bshd->bhts", qb, k_cast,
+            preferred_element_type=wdt,
+        ) * jnp.asarray(scale, wdt)
+        scores = jnp.where(mb[:, None], scores, jnp.asarray(_NEG_INF, wdt))
+        scores = constrain(scores, ("batch", "tp", None, None))
+        m = jax.lax.stop_gradient(
+            jnp.max(scores, axis=-1, keepdims=True)
+        ).astype(jnp.float32)
+        e = jnp.exp(scores.astype(jnp.float32) - m)
+        w = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(wdt)
+        ob = jnp.einsum("bhts,bshd->bthd", w, v_cast,
+                        preferred_element_type=wdt)
+        return constrain(ob, head_spec)
+
+    if t <= q_chunk:
+        out = block((q, mask))
+    else:
+        n = t // q_chunk
+        rem = t % q_chunk
+        qs = q[:, : n * q_chunk].reshape(b, n, q_chunk, h, -1)
+        ms = mask[:, : n * q_chunk].reshape(b, n, q_chunk, -1)
+        outs = jax.lax.map(
+            block, (qs.transpose(1, 0, 2, 3, 4), ms.transpose(1, 0, 2, 3))
+        )
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n * q_chunk, h, -1)
+        if rem:
+            tail = block((q[:, n * q_chunk :], mask[:, n * q_chunk :]))
+            out = jnp.concatenate([out, tail], axis=1)
+    return out.astype(q.dtype)
+
+
+def _attend_streaming(
+    q: Array,  # (B, T, H, hd) — heads already repeated to full count
+    k: Array,  # (B, S, H, hd)
+    v: Array,  # (B, S, H, dv)
+    *,
+    scale: float,
+    causal_offset: int = 0,  # absolute position of q[0] minus k[0]
+    window: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> Array:
+    """Flash-attention-2 style streaming attention in pure JAX (§Perf L2).
+
+    Online-softmax over k-tiles inside a checkpointed scan: full (T, S)
+    score matrices never materialize in HBM — per-tile (q_chunk, k_chunk)
+    blocks live only inside the scan body (recomputed in the backward).
+    Tiles that are statically dead under the causal/window mask are never
+    launched: the k-scan for query chunk i covers only
+    [max(0, hi−window+1) … hi], halving causal compute and making
+    sliding-window layers O(T·window) instead of O(T·S).
+    """
+    from repro.distribution.sharding import constrain
+
+    b, t, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    s = k.shape[1]
+    dv = v.shape[-1]
+    head_spec = ("batch", None, "tp", None)
+    q = constrain(q, head_spec)
+    k = constrain(k, head_spec)
+    v = constrain(v, head_spec)
+    nq = -(-t // q_chunk)
+    nk_total = -(-s // k_chunk)
+
+    def q_block(i: int, qb: Array) -> Array:
+        # static causal/window bounds for this query chunk
+        q_lo = i * q_chunk
+        q_hi = min(t, q_lo + q_chunk) - 1
+        hi_abs = q_hi + causal_offset  # last key visible to this chunk
+        k_hi_tile = min(nk_total, hi_abs // k_chunk + 1)
+        k_lo_tile = 0
+        if window:
+            k_lo_tile = max(0, (q_lo + causal_offset - window + 1) // k_chunk)
+        tiles = jnp.arange(k_lo_tile, k_hi_tile)
+        tc = qb.shape[1]
+
+        def body(carry, kt):
+            acc, m_run, l_run = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, kt * k_chunk, k_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kt * k_chunk, k_chunk, 1)
+            sc = (
+                jnp.einsum(
+                    "bthd,bshd->bhts",
+                    qb.astype(jnp.float32),
+                    kb.astype(jnp.float32),
+                )
+                * scale
+            )  # (B, H, tc, k_chunk)
+            qpos = causal_offset + q_lo + jnp.arange(tc)[:, None]
+            kpos = kt * k_chunk + jnp.arange(k_chunk)[None, :]
+            ok = kpos <= qpos
+            if window:
+                ok &= (qpos - kpos) < window
+            sc = jnp.where(ok, sc, _NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhts,bshd->bhtd", p, vb.astype(jnp.float32)
+            )
+            return (acc, m_new, l_new), None
+
+        init = (
+            jnp.zeros((b, h, tc, dv), jnp.float32),
+            jnp.full((b, h, tc), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, tc), jnp.float32),
+        )
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            jax.checkpoint(body, prevent_cse=False), init, tiles
+        )
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return constrain(
+            out.transpose(0, 2, 1, 3).astype(q.dtype), head_spec
+        )  # (B, tc, H, dv)
+
+    outs = []
+    for i in range(nq):
+        qb = q[:, i * q_chunk : min(t, (i + 1) * q_chunk)]
+        outs.append(q_block(i, qb))
+    return outs[0] if nq == 1 else jnp.concatenate(outs, axis=1)
+
+
+def attend_causal(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    scale: float,
+    window: int = 0,
+    q_chunk: int = 1024,
+) -> Array:
+    """Causal self-attention dispatch: streaming (flash-style) for long
+    sequences, single-block path otherwise."""
+    t = q.shape[1]
+    if t > q_chunk:
+        return _attend_streaming(
+            q, k, v, scale=scale, window=window, q_chunk=q_chunk
+        )
+    return _attend(q, k, v, causal_mask(t, window), scale=scale, q_chunk=q_chunk)
+
+
+def causal_mask(t: int, window: int = 0) -> Array:
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    m = j <= i
+    if window:
+        m &= (i - j) < window
+    return m
+
+
+def cache_mask(positions_in_cache: Array, pos: Array, window: int = 0) -> Array:
+    """(S_cache,) absolute positions (−1 = empty) vs current position."""
+    m = (positions_in_cache >= 0) & (positions_in_cache <= pos)
+    if window:
+        m &= (pos - positions_in_cache) < window
+    return m
+
+
+# --- GQA ---------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: AttentionConfig, d_model: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "w_q": dense_init(ks[0], d_model, h * hd, dtype).reshape(d_model, h, hd),
+        "w_k": dense_init(ks[1], d_model, hkv * hd, dtype).reshape(
+            d_model, hkv, hd
+        ),
+        "w_v": dense_init(ks[2], d_model, hkv * hd, dtype).reshape(
+            d_model, hkv, hd
+        ),
+        "w_o": dense_init(ks[3], h * hd, d_model, dtype).reshape(h, hd, d_model),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h, hd), dtype)
+        p["b_k"] = jnp.zeros((hkv, hd), dtype)
+        p["b_v"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd)
+        p["k_norm"] = init_rms_norm(hd)
+    return p
+
+
+def _gqa_qkv(p: Params, cfg: AttentionConfig, x: Array, positions, theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def apply_gqa(
+    p: Params,
+    cfg: AttentionConfig,
+    x: Array,
+    *,
+    window: int = 0,
+    rope_theta: float = 0.0,
+    q_chunk: int = 1024,
+) -> Array:
+    b, s, _ = x.shape
+    theta = rope_theta or cfg.rope_theta
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _gqa_qkv(p, cfg, x, positions, theta)
+    out = attend_causal(
+        q,
+        k,
+        v,
+        window=window,
+        scale=1.0 / math.sqrt(cfg.head_dim),
+        q_chunk=q_chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+
+
+def init_gqa_cache(
+    cfg: AttentionConfig, batch: int, cache_len: int, window: int, dtype
+) -> Params:
+    size = min(cache_len, window) if window else cache_len
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, hkv, hd), dtype),
+        "v": jnp.zeros((batch, size, hkv, hd), dtype),
+        "positions": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def prefill_gqa(
+    p: Params,
+    cfg: AttentionConfig,
+    x: Array,
+    cache: Params,
+    *,
+    window: int = 0,
+    rope_theta: float = 0.0,
+    q_chunk: int = 1024,
+) -> tuple[Array, Params]:
+    b, s, _ = x.shape
+    theta = rope_theta or cfg.rope_theta
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _gqa_qkv(p, cfg, x, positions, theta)
+    out = attend_causal(
+        q,
+        k,
+        v,
+        window=window,
+        scale=1.0 / math.sqrt(cfg.head_dim),
+        q_chunk=q_chunk,
+    )
+    size = cache["k"].shape[1]
+    if size >= s:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+            ),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+            ),
+            "positions": jax.lax.dynamic_update_slice(
+                cache["positions"], jnp.arange(s, dtype=jnp.int32), (0,)
+            ),
+        }
+    else:  # ring buffer smaller than the prompt: keep the last `size`
+        new_cache = {
+            "k": _ring_fill(cache["k"], k, s),
+            "v": _ring_fill(cache["v"], v, s),
+            "positions": _ring_positions(size, s),
+        }
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), new_cache
+
+
+def _ring_fill(buf: Array, seq: Array, s: int) -> Array:
+    size = buf.shape[1]
+    last = seq[:, s - size :]
+    slots = jnp.arange(s - size, s, dtype=jnp.int32) % size
+    return buf.at[:, slots].set(last.astype(buf.dtype))
+
+
+def _ring_positions(size: int, s: int) -> Array:
+    pos = jnp.arange(s - size, s, dtype=jnp.int32)
+    slots = pos % size
+    return jnp.zeros((size,), jnp.int32).at[slots].set(pos)
+
+
+def decode_gqa(
+    p: Params,
+    cfg: AttentionConfig,
+    x: Array,  # (B, 1, D)
+    cache: Params,
+    pos: Array,  # scalar int32 — current position
+    *,
+    window: int = 0,
+    rope_theta: float = 0.0,
+) -> tuple[Array, Params]:
+    theta = rope_theta or cfg.rope_theta
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    q, k, v = _gqa_qkv(p, cfg, x, positions, theta)
+    size = cache["k"].shape[1]
+    slot = (pos % size) if window else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+    positions_c = jax.lax.dynamic_update_slice(
+        cache["positions"], pos[None].astype(jnp.int32), (slot,)
+    )
+    mask = cache_mask(positions_c, pos, window)[None, None, :]  # (1,1,S)
+    out = _attend(
+        q,
+        k_cache,
+        v_cache,
+        mask,
+        scale=1.0 / math.sqrt(cfg.head_dim),
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return out, {"k": k_cache, "v": v_cache, "positions": positions_c}
+
+
+# --- MLA (DeepSeek-V2) -------------------------------------------------------
+
+
+def init_mla(key, cfg: AttentionConfig, d_model: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "w_dq": dense_init(ks[0], d_model, ql, dtype),
+        "q_norm": init_rms_norm(ql),
+        "w_uq": dense_init(ks[1], ql, h * (dn + dr), dtype).reshape(
+            ql, h, dn + dr
+        ),
+        "w_dkv": dense_init(ks[2], d_model, kl + dr, dtype),
+        "kv_norm": init_rms_norm(kl),
+        "w_uk": dense_init(ks[3], kl, h * dn, dtype).reshape(kl, h, dn),
+        "w_uv": dense_init(ks[4], kl, h * dv, dtype).reshape(kl, h, dv),
+        "w_o": dense_init(ks[5], h * dv, d_model, dtype).reshape(h, dv, d_model),
+    }
+
+
+def _mla_q(p, cfg, x, positions, theta):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(linear_(p["w_dq"], x), p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(p, cfg, x, positions, theta):
+    kl, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv_full = linear_(p["w_dkv"], x)
+    c_kv = rms_norm(ckv_full[..., :kl], p["kv_norm"])
+    k_rope = apply_rope(ckv_full[..., kl:][:, :, None, :], positions, theta)[
+        :, :, 0
+    ]
+    return c_kv, k_rope
+
+
+def linear_(w, x):
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def apply_mla(
+    p: Params,
+    cfg: AttentionConfig,
+    x: Array,
+    *,
+    q_chunk: int = 1024,
+    window: int = 0,
+    rope_theta: float = 0.0,
+) -> Array:
+    del window  # MLA archs here are full-attention
+    b, s, _ = x.shape
+    theta = rope_theta or cfg.rope_theta
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, theta)
+    c_kv, k_rope = _mla_latents(p, cfg, x, positions, theta)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, cfg.num_heads, dr))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attend_causal(
+        q,
+        k,
+        v,
+        scale=1.0 / math.sqrt(dn + dr),
+        q_chunk=q_chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+
+
+def init_mla_cache(
+    cfg: AttentionConfig, batch: int, cache_len: int, window: int, dtype
+) -> Params:
+    del window
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+        "positions": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def prefill_mla(
+    p: Params,
+    cfg: AttentionConfig,
+    x: Array,
+    cache: Params,
+    *,
+    q_chunk: int = 1024,
+    window: int = 0,
+    rope_theta: float = 0.0,
+) -> tuple[Array, Params]:
+    b, s, _ = x.shape
+    theta = rope_theta or cfg.rope_theta
+    out = apply_mla(
+        p, cfg, x, q_chunk=q_chunk, window=window, rope_theta=rope_theta
+    )
+    positions = jnp.arange(s)[None, :]
+    c_kv, k_rope = _mla_latents(p, cfg, x, positions, theta)
+    new_cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)
+        ),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0)
+        ),
+        "positions": jax.lax.dynamic_update_slice(
+            cache["positions"], jnp.arange(s, dtype=jnp.int32), (0,)
+        ),
+    }
+    return out, new_cache
+
+
+def decode_mla(
+    p: Params,
+    cfg: AttentionConfig,
+    x: Array,  # (B, 1, D)
+    cache: Params,
+    pos: Array,
+    *,
+    window: int = 0,
+    rope_theta: float = 0.0,
+) -> tuple[Array, Params]:
+    """Absorbed-matrix MLA decode: scores/outputs computed against the
+    cached latents; W_uk folds into q, W_uv folds into the output."""
+    del window
+    theta = rope_theta or cfg.rope_theta
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, theta)  # (B,1,H,·)
+    c_kv_t, k_rope_t = _mla_latents(p, cfg, x, positions, theta)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+    positions_c = jax.lax.dynamic_update_slice(
+        cache["positions"], pos[None].astype(jnp.int32), (pos,)
+    )
+    # absorb W_uk into the query:  q_abs (B,1,H,kl)
+    q_abs = jnp.einsum("bthk,lhk->bthl", q_nope.astype(jnp.float32), p["w_uk"])
+    scores = jnp.einsum(
+        "bthl,bsl->bhts", q_abs, c_kv.astype(jnp.float32)
+    ) + jnp.einsum(
+        "bthk,bsk->bhts", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+    )
+    scores = scores / math.sqrt(dn + dr)
+    mask = cache_mask(positions_c, pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_latent = jnp.einsum("bhts,bsl->bthl", w, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bthl,lhk->bthk", out_latent, p["w_uv"])  # (B,1,H,dv)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["w_o"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "positions": positions_c}
+
+
+# --- dispatch ----------------------------------------------------------------
+
+INIT = {"gqa": init_gqa, "mla": init_mla}
+APPLY = {"gqa": apply_gqa, "mla": apply_mla}
+INIT_CACHE = {"gqa": init_gqa_cache, "mla": init_mla_cache}
+PREFILL = {"gqa": prefill_gqa, "mla": prefill_mla}
+DECODE = {"gqa": decode_gqa, "mla": decode_mla}

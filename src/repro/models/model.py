@@ -1,0 +1,173 @@
+"""Top-level model API: init / forward / loss / prefill / decode per config.
+
+One class serves every assigned architecture (``--arch <id>``); the
+config's layer pattern decides what gets built. Entry points:
+
+  * ``init(key)``                     → params (dense; ``sparsify`` opt-in)
+  * ``forward(params, inputs)``       → logits  (B, S, V)
+  * ``loss(params, batch)``           → (scalar, metrics)  [train_step core]
+  * ``init_cache(batch, cache_len)``  → decode cache pytree
+  * ``prefill(params, inputs, cache)``→ (logits, cache)
+  * ``decode_step(params, tok, cache, pos)`` → (logits, cache)
+
+Input modes: ``tokens`` (int32 ids → embedding table), ``embeddings``
+(float (B,S,D) — the VLM/audio frontend stub per the assignment) and
+``features`` (the paper's MLP: float (B, m) feature vectors, no
+embedding, logits = output features).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distribution import sharding
+from repro.models import transformer as tfm
+from repro.models.layers import cross_entropy_loss, embed_init, init_rms_norm, rms_norm
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def cast_floating(tree, dtype):
+    """Cast floating leaves to the compute dtype (master params stay fp32
+    in the optimizer; compute uses bf16 copies — the all-gather under FSDP
+    then moves half the bytes)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating)
+        else a,
+        tree,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------ init ------------------------------------
+    def init(self, key: Array) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ke, ks, kl = jax.random.split(key, 3)
+        p: Params = {"stack": tfm.init_stack(ks, cfg, dtype)}
+        if cfg.input_mode == "tokens":
+            p["embed"] = embed_init(ke, cfg.vocab_size, cfg.d_model, dtype)
+        if cfg.input_mode != "features":
+            p["final_norm"] = init_rms_norm(cfg.d_model)
+            if not cfg.tie_embeddings:
+                p["lm_head"] = (
+                    jax.random.normal(kl, (cfg.d_model, cfg.vocab_size), dtype)
+                    * 0.02
+                )
+        return p
+
+    def sparsify(self, params: Params) -> Params:
+        """Apply the paper's technique: block-prune targeted weights → BSR."""
+        out = dict(params)
+        out["stack"] = tfm.sparsify_stack(params["stack"], self.cfg)
+        return out
+
+    # ----------------------------- forward ----------------------------------
+    def _embed(self, params: Params, inputs: Array) -> Array:
+        cfg = self.cfg
+        if cfg.input_mode == "tokens":
+            # distributed vocab-parallel lookup (plain table[ids] on CPU)
+            x = sharding.embed_lookup(params["embed"], inputs)
+            x = sharding.constrain(x, ("batch", "seq", None))
+        elif cfg.input_mode == "embeddings":
+            x = inputs  # (B, S, D) float stub frontend
+        else:  # features — the paper's MLP operates on (B, m)
+            x = inputs[:, None, :] if inputs.ndim == 2 else inputs
+        return x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def _head(self, params: Params, x: Array) -> Array:
+        cfg = self.cfg
+        if cfg.input_mode == "features":
+            return x  # output features ARE the logits (vocab = m)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = params["embed"].astype(x.dtype)
+            # the table is stored d-sharded (gather-friendly); reshard it
+            # vocab-over-tp for the logits matmul so logits come out
+            # vocab-sharded instead of partial-summed (see sharding.py)
+            w = sharding.constrain(w, ("tp", None))
+            return jnp.einsum("bsd,vd->bsv", x, w)
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+
+    def forward(self, params: Params, inputs: Array) -> Array:
+        return self.forward_with_aux(params, inputs)[0]
+
+    def forward_with_aux(self, params: Params, inputs: Array) -> tuple[Array, Array]:
+        params = cast_floating(params, jnp.dtype(self.cfg.compute_dtype))
+        x = self._embed(params, inputs)
+        x, aux = tfm.apply_stack(params["stack"], self.cfg, x)
+        return self._head(params, x), aux
+
+    # ------------------------------- loss -----------------------------------
+    def loss(self, params: Params, batch: dict[str, Array]) -> tuple[Array, dict]:
+        """batch: {"inputs": tokens/embeddings, "labels": (B, S) int32}."""
+        logits, aux = self.forward_with_aux(params, batch["inputs"])
+        ce = cross_entropy_loss(logits, batch["labels"], z_loss=1e-4)
+        aux_w = self.cfg.moe.aux_loss_weight if self.cfg.moe else 0.0
+        total = ce + aux_w * aux
+        return total, {"ce": ce, "moe_aux": aux}
+
+    # ------------------------------ serving ---------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=None) -> Params:
+        dtype = dtype or jnp.dtype(self.cfg.compute_dtype)
+        return tfm.init_stack_cache(self.cfg, batch, cache_len, dtype)
+
+    def prefill(
+        self, params: Params, inputs: Array, cache: Params
+    ) -> tuple[Array, Params]:
+        """Process the prompt, fill the cache; logits for the LAST position."""
+        params = cast_floating(params, jnp.dtype(self.cfg.compute_dtype))
+        x = self._embed(params, inputs)
+        x, cache = tfm.prefill_stack(params["stack"], self.cfg, x, cache)
+        logits = self._head(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(
+        self, params: Params, token: Array, cache: Params, pos: Array
+    ) -> tuple[Array, Params]:
+        """One new token (B,) int32 (or (B,1,D) embeddings) at position pos."""
+        params = cast_floating(params, jnp.dtype(self.cfg.compute_dtype))
+        if token.ndim == 1:
+            token = token[:, None]
+        x = self._embed(params, token)
+        x, cache = tfm.decode_stack(params["stack"], self.cfg, x, cache, pos)
+        logits = self._head(params, x)
+        return logits[:, 0], cache
+
+    # ----------------------------- accounting -------------------------------
+    def param_count(self) -> int:
+        import math
+
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.moe is None:
+            return total
+        specs = cfg.layer_specs()
+        n_moe = sum(1 for s in specs if s.ffn == "moe")
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        per_expert = cfg.d_model * cfg.moe.d_expert * (3 if cfg.glu else 2)
+        inactive = n_moe * (e - k) * per_expert
+        return total - inactive
+
+
+def build(name_or_cfg) -> Model:
+    if isinstance(name_or_cfg, ModelConfig):
+        return Model(name_or_cfg)
+    from repro.configs import get_config
+
+    return Model(get_config(name_or_cfg))

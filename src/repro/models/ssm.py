@@ -1,0 +1,388 @@
+"""Attention-free mixers: RWKV-6 (Finch) time/channel-mix and Mamba-1
+selective SSM (for Jamba), with chunked-parallel training scans.
+
+Both recurrences are diagonal-decay linear systems
+``h_t = exp(w_t) ⊙ h_{t-1} + k_t ⊗ v_t`` — the chunked form turns them
+into dense (MXU-friendly) matmuls per chunk with an inter-chunk carried
+state, instead of a length-T sequential loop. Numerical discipline: all
+per-step log-decays are clamped to ``≥ _LOG_DECAY_MIN`` at op entry (in
+BOTH chunked and recurrent paths, so the clamp is part of the op's
+semantics — mirroring the fp32 clamps in the official CUDA kernels) and
+the chunk is 16 so the within-chunk ``exp(±cumsum)`` rescaling stays
+inside f32 range (e^{5·16} ≈ 5.5e34 < f32 max).
+
+Decode paths carry O(1) state: (wkv state, token-shift) for RWKV;
+(conv tap, ssm state) for Mamba.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, RWKVConfig
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+Array = jax.Array
+Params = dict[str, Any]
+
+_LOG_DECAY_MIN = -5.0
+_CHUNK = 16
+
+
+def _clamp_logw(logw: Array) -> Array:
+    return jnp.clip(logw, _LOG_DECAY_MIN, 0.0)
+
+
+# =============================== RWKV-6 ======================================
+
+
+def init_rwkv_time_mix(
+    key, d_model: int, cfg: RWKVConfig, dtype=jnp.float32
+) -> Params:
+    ks = jax.random.split(key, 10)
+    h = d_model // cfg.head_dim
+    return {
+        # data-dependent token-shift interpolation (5 targets: w,k,v,r,g)
+        "mu_x": jnp.zeros((d_model,), dtype),
+        "mu": jnp.zeros((5, d_model), dtype),
+        "mix_w1": dense_init(ks[0], d_model, 5 * cfg.mix_lora, dtype),
+        "mix_w2": 0.01
+        * jax.random.normal(ks[1], (5, cfg.mix_lora, d_model), dtype),
+        "w_r": dense_init(ks[2], d_model, d_model, dtype),
+        "w_k": dense_init(ks[3], d_model, d_model, dtype),
+        "w_v": dense_init(ks[4], d_model, d_model, dtype),
+        "w_g": dense_init(ks[5], d_model, d_model, dtype),
+        "w_o": dense_init(ks[6], d_model, d_model, dtype),
+        # data-dependent decay: logw = -exp(w0 + tanh(x@dw1)@dw2)
+        "w0": jnp.full((d_model,), -1.0, dtype),
+        "decay_w1": dense_init(ks[7], d_model, cfg.decay_lora, dtype),
+        "decay_w2": 0.01
+        * jax.random.normal(ks[8], (cfg.decay_lora, d_model), dtype),
+        "bonus_u": 0.5 * jax.random.normal(ks[9], (h, cfg.head_dim), dtype),
+        "ln_x": init_rms_norm(cfg.head_dim),  # per-head group norm
+    }
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """The x_{t-1} stream; ``prev`` is the carried last token (decode)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: Array, xprev: Array) -> list[Array]:
+    """RWKV-6 data-dependent lerp producing the 5 mixed streams."""
+    b, s, _ = x.shape
+    diff = xprev - x
+    xx = x + diff * p["mu_x"]
+    inner = jnp.tanh(xx @ p["mix_w1"]).reshape(b, s, 5, -1)
+    dyn = jnp.einsum("bsnl,nld->nbsd", inner, p["mix_w2"])  # (5,B,S,D)
+    return [x + diff * (p["mu"][i] + dyn[i]) for i in range(5)]
+
+
+def wkv_chunked(
+    r: Array,  # (B, H, T, K)
+    k: Array,  # (B, H, T, K)
+    v: Array,  # (B, H, T, V)
+    logw: Array,  # (B, H, T, K), ≤ 0 after clamp
+    u: Array,  # (H, K) current-token bonus
+    h0: Array,  # (B, H, K, V)
+    *,
+    chunk: int = _CHUNK,
+) -> tuple[Array, Array]:
+    """out_t = r_t·(h_{t-1} + u⊙k_t⊗v_t);  h_t = e^{w_t}⊙h_{t-1} + k_t⊗v_t."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    logw = _clamp_logw(logw.astype(jnp.float32))
+    pad = (-t) % chunk
+    if pad:
+        r, k, v, logw = (
+            jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            for a in (r, k, v, logw)
+        )
+    nc = (t + pad) // chunk
+
+    def chunks(a):
+        return (
+            a.astype(jnp.float32)
+            .reshape(b, h, nc, chunk, a.shape[-1])
+            .transpose(2, 0, 1, 3, 4)
+        )
+
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+    uf = u.astype(jnp.float32)
+
+    def body(hs, xs):
+        rc, kc, vc, wc = xs  # each (B, H, C, ·)
+        cum = jnp.cumsum(wc, axis=2)
+        r_t = rc * jnp.exp(cum - wc)  # decay up to t-1 (exclusive)
+        k_t = kc * jnp.exp(-cum)
+        scores = jnp.einsum("bhtk,bhsk->bhts", r_t, k_t)
+        scores = jnp.where(tri_strict, scores, 0.0)
+        y = jnp.einsum("bhts,bhsv->bhtv", scores, vc)
+        y += jnp.einsum("bhtk,bhkv->bhtv", r_t, hs)
+        diag = jnp.einsum("bhtk,hk->bht", rc * kc, uf)
+        y += diag[..., None] * vc
+        decay_end = jnp.exp(cum[:, :, -1:, :] - cum)
+        h_new = hs * jnp.exp(cum[:, :, -1, :])[..., None] + jnp.einsum(
+            "bhtk,bhtv->bhkv", kc * decay_end, vc
+        )
+        return h_new, y
+
+    # checkpointed chunk body (§Perf J1): the backward recomputes the
+    # within-chunk decay matrices instead of saving ~10 per-chunk stacks
+    h_fin, ys = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        h0.astype(jnp.float32),
+        (chunks(r), chunks(k), chunks(v), chunks(logw)),
+    )
+    out = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * chunk, dv)[:, :, :t]
+    return out, h_fin
+
+
+def wkv_step(
+    r: Array,  # (B, H, K)
+    k: Array,
+    v: Array,  # (B, H, V)
+    logw: Array,  # (B, H, K)
+    u: Array,  # (H, K)
+    h: Array,  # (B, H, K, V)
+) -> tuple[Array, Array]:
+    r, k, v, h = (a.astype(jnp.float32) for a in (r, k, v, h))
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum(
+        "bhk,bhkv->bhv", r, h + u.astype(jnp.float32)[None, :, :, None] * kv
+    )
+    h_new = jnp.exp(_clamp_logw(logw.astype(jnp.float32)))[..., None] * h + kv
+    return out, h_new
+
+
+def apply_rwkv_time_mix(
+    p: Params,
+    cfg: RWKVConfig,
+    x: Array,
+    state: Params | None = None,
+) -> tuple[Array, Params]:
+    """state (decode): {"shift": (B,D), "wkv": (B,H,K,V)}; None → zeros."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = d // hd
+    prev = state["shift"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xprev)
+
+    def heads(a):
+        return a.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    r = heads(xr @ p["w_r"])
+    k = heads(xk @ p["w_k"])
+    v = heads(xv @ p["w_v"])
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = -jnp.exp(
+        p["w0"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    )  # (B,S,D)
+    logw = heads(logw)
+
+    h0 = (
+        state["wkv"]
+        if state is not None
+        else jnp.zeros((b, h, hd, hd), jnp.float32)
+    )
+    if s == 1 and state is not None:
+        out, h_fin = wkv_step(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], logw[:, :, 0], p["bonus_u"], h0
+        )
+        out = out[:, None]  # (B,1,H,V) after transpose below
+        out = out.transpose(0, 1, 2, 3).reshape(b, 1, h, hd)
+    else:
+        out, h_fin = wkv_chunked(r, k, v, logw, p["bonus_u"], h0)
+        out = out.transpose(0, 2, 1, 3)  # (B,S,H,V)
+    out = rms_norm(out, p["ln_x"])  # per-head group norm
+    out = out.reshape(b, s, d).astype(x.dtype) * g
+    out = out @ p["w_o"]
+    return out, {"shift": x[:, -1], "wkv": h_fin}
+
+
+def init_rwkv_channel_mix(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d_model,), dtype),
+        "mu_r": jnp.zeros((d_model,), dtype),
+        "w_k": dense_init(k1, d_model, d_ff, dtype),
+        "w_v": dense_init(k2, d_ff, d_model, dtype),
+        "w_r": dense_init(k3, d_model, d_model, dtype),
+    }
+
+
+def apply_rwkv_channel_mix(
+    p: Params, x: Array, state: Params | None = None
+) -> tuple[Array, Params]:
+    prev = state["shift"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    xk = x + (xprev - x) * p["mu_k"]
+    xr = x + (xprev - x) * p["mu_r"]
+    k = jax.nn.relu(xk @ p["w_k"])
+    k = k * k  # squared ReLU
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
+    return out, {"shift": x[:, -1]}
+
+
+# =============================== Mamba-1 =====================================
+
+
+def init_mamba(key, d_model: int, cfg: MambaConfig, dtype=jnp.float32) -> Params:
+    di = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or math.ceil(d_model / 16)
+    ks = jax.random.split(key, 5)
+    a_init = jnp.broadcast_to(
+        jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (di, cfg.d_state)
+    )
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * cfg.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus ≈ 0.01
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tap: Array | None) -> Array:
+    """Depthwise causal conv: y_t = Σ_i w[i]·x[t-(K-1)+i] + b.
+    ``tap``: (B, K-1, di) carried context (decode/prefill continuation)."""
+    kk = w.shape[0]
+    if tap is None:
+        xp = jnp.pad(x, ((0, 0), (kk - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tap, x], axis=1)
+    y = sum(w[i] * xp[:, i : i + x.shape[1]] for i in range(kk))
+    return y + b
+
+
+def mamba_scan_chunked(
+    u: Array,  # (B, T, di) conv+silu output
+    delta: Array,  # (B, T, di)
+    a: Array,  # (di, N) negative
+    bm: Array,  # (B, T, N)
+    cm: Array,  # (B, T, N)
+    h0: Array,  # (B, di, N)
+    *,
+    chunk: int = _CHUNK,
+) -> tuple[Array, Array]:
+    """h_t = e^{Δ_t A}⊙h_{t-1} + (Δ_t u_t)⊗B_t ;  y_t = C_t·h_t."""
+    b, t, di = u.shape
+    n = a.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        u, delta = (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) for x in (u, delta))
+        bm, cm = (jnp.pad(x, ((0, 0), (0, pad), (0, 0))) for x in (bm, cm))
+    nch = (t + pad) // chunk
+
+    def chunks(x):
+        return (
+            x.astype(jnp.float32)
+            .reshape(b, nch, chunk, x.shape[-1])
+            .transpose(1, 0, 2, 3)
+        )
+
+    tri_incl = jnp.tril(jnp.ones((chunk, chunk), bool))
+    af = a.astype(jnp.float32)
+
+    def body(hs, xs):
+        uc, dc, bc, cc = xs  # (B, C, di) / (B, C, N)
+        da = _clamp_logw(dc[..., None] * af)  # (B, C, di, N)
+        cum = jnp.cumsum(da, axis=1)
+        q = cc[:, :, None, :] * jnp.exp(cum)
+        kt = bc[:, :, None, :] * jnp.exp(-cum)
+        scores = jnp.einsum("btcn,bscn->btsc", q, kt)
+        scores = jnp.where(tri_incl[None, :, :, None], scores, 0.0)
+        dx = dc * uc  # (B, C, di)
+        y = jnp.einsum("btsc,bsc->btc", scores, dx)
+        y += jnp.einsum("btcn,bcn->btc", q, hs)
+        k_end = bc[:, :, None, :] * jnp.exp(cum[:, -1:] - cum)
+        h_new = hs * jnp.exp(cum[:, -1]) + jnp.einsum(
+            "bscn,bsc->bcn", k_end, dx
+        )
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),  # §Perf J1
+        h0.astype(jnp.float32),
+        (chunks(u), chunks(delta), chunks(bm), chunks(cm)),
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nch * chunk, di)[:, :t]
+    return y, h_fin
+
+
+def mamba_step(
+    u_t: Array,  # (B, di)
+    delta_t: Array,
+    a: Array,
+    b_t: Array,  # (B, N)
+    c_t: Array,
+    h: Array,  # (B, di, N)
+) -> tuple[Array, Array]:
+    da = jnp.exp(_clamp_logw(delta_t[..., None] * a.astype(jnp.float32)))
+    h_new = da * h + (delta_t * u_t)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h_new, c_t)
+    return y, h_new
+
+
+def apply_mamba(
+    p: Params,
+    cfg: MambaConfig,
+    x: Array,
+    state: Params | None = None,
+) -> tuple[Array, Params]:
+    """state (decode): {"conv": (B, d_conv-1, di), "ssm": (B, di, N)}."""
+    b, s, d = x.shape
+    di = cfg.expand * d
+    xz = x @ p["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    tap = state["conv"] if state is not None else None
+    x_c = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"], tap))
+    proj = x_c @ p["x_proj"]
+    dt_rank = p["dt_proj"].shape[0]
+    n = cfg.d_state
+    dt_raw, bm, cm = (
+        proj[..., :dt_rank],
+        proj[..., dt_rank : dt_rank + n],
+        proj[..., dt_rank + n :],
+    )
+    delta = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    h0 = (
+        state["ssm"]
+        if state is not None
+        else jnp.zeros((b, di, n), jnp.float32)
+    )
+    if s == 1 and state is not None:
+        y, h_fin = mamba_step(
+            x_c[:, 0].astype(jnp.float32),
+            delta[:, 0].astype(jnp.float32),
+            a,
+            bm[:, 0].astype(jnp.float32),
+            cm[:, 0].astype(jnp.float32),
+            h0,
+        )
+        y = y[:, None]
+    else:
+        y, h_fin = mamba_scan_chunked(x_c, delta, a, bm, cm, h0)
+    y = y.astype(x.dtype) + p["D"] * x_c
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_tap = (
+        jnp.concatenate([tap, x_in], axis=1)[:, -(cfg.d_conv - 1) :]
+        if tap is not None
+        else x_in[:, -(cfg.d_conv - 1) :]
+        if s >= cfg.d_conv - 1
+        else jnp.pad(x_in, ((0, 0), (cfg.d_conv - 1 - s, 0), (0, 0)))
+    )
+    return out, {"conv": new_tap, "ssm": h_fin}

@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill + decode loop with sampling.
+
+The engine owns the decode cache (GQA KV / MLA latent / SSM state — built
+by ``Model.init_cache`` per the arch's mixer kinds) and drives jit'd
+``prefill`` / ``decode_step`` functions. Requests are served in aligned
+batches (continuous batching is a scheduler concern above this layer; the
+dry-run cells ``decode_32k``/``long_500k`` lower exactly the
+``decode_step`` this engine calls in its loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+Array = jax.Array
+
+
+def cache_nbytes(cache: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+
+
+def sample_token(logits: Array, key: Array, temperature: float = 0.0) -> Array:
+    """Greedy (T=0) or temperature sampling over (B, V) logits."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+@dataclasses.dataclass
+class Engine:
+    model: Model
+    params: Any
+    batch_size: int
+    cache_len: int
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+        self._key = jax.random.key(self.seed)
+
+    def generate(
+        self, prompts: Array, max_new_tokens: int
+    ) -> tuple[Array, dict]:
+        """prompts: (B, S_prompt) int32 (right-aligned, no padding support
+        needed for the aligned-batch benchmark path). Returns (B, new)."""
+        b, s = prompts.shape
+        assert b == self.batch_size
+        cache = self.model.init_cache(b, self.cache_len)
+        logits, cache = self._prefill(self.params, prompts, cache)
+        self._key, k = jax.random.split(self._key)
+        tok = sample_token(logits[:, -1], k, self.temperature)
+        out = [tok]
+        for i in range(max_new_tokens - 1):
+            pos = jnp.asarray(s + i, jnp.int32)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            self._key, k = jax.random.split(self._key)
+            tok = sample_token(logits, k, self.temperature)
+            out.append(tok)
+        tokens = jnp.stack(out, axis=1)
+        stats = {
+            "prompt_tokens": b * s,
+            "generated_tokens": b * max_new_tokens,
+            "cache_bytes": cache_nbytes(cache),
+        }
+        return tokens, stats
+
+
+def make_serve_fns(model: Model):
+    """(prefill_fn, decode_fn) suitable for jit/lower — the functions the
+    dry-run compiles for the decode-shape cells."""
+
+    def prefill_fn(params, tokens, cache):
+        return model.prefill(params, tokens, cache)
+
+    def decode_fn(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,4 @@
+from repro.sparse.bsr import BlockSparseMatrix
+from repro.sparse import ops
+
+__all__ = ["BlockSparseMatrix", "ops"]

@@ -1,0 +1,212 @@
+"""Block-compressed sparse row (BSR) weight matrices, ELL-padded for TPU.
+
+This is the TPU-native adaptation of the paper's CSR weight storage (see
+DESIGN.md §2): instead of (col, value) scalar pairs consumed by scalar
+FMAs, we store MXU-tile-sized dense blocks addressed by a per-row-block
+column-index table. The table is padded to a static ``max_blocks_per_row``
+(ELL format) so every shape is static — a hard requirement for jit /
+pjit / shard_map and for the Pallas kernel's BlockSpec grid.
+
+Padding discipline: padded slots carry ``col_idx = 0``, ``block = 0`` and
+``block_mask = False``. Under the arithmetic semiring the zero block is
+self-neutralising; for general semirings consumers must honour
+``block_mask`` (``repro.sparse.ops`` does).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockSparseMatrix:
+    """ELL-padded BSR matrix of logical shape ``shape``.
+
+    Attributes:
+      blocks:     (n_row_blocks, max_blocks_per_row, bs_r, bs_c) values.
+      col_idx:    (n_row_blocks, max_blocks_per_row) int32 block-column ids.
+      block_mask: (n_row_blocks, max_blocks_per_row) bool validity.
+      shape:      logical (m, n) — static.
+      block_shape: (bs_r, bs_c) — static.
+    """
+
+    blocks: Array
+    col_idx: Array
+    block_mask: Array
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+    # --- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.blocks, self.col_idx, self.block_mask), (
+            self.shape,
+            self.block_shape,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        blocks, col_idx, block_mask = children
+        shape, block_shape = aux
+        return cls(blocks, col_idx, block_mask, shape, block_shape)
+
+    # --- derived structure ----------------------------------------------
+    @property
+    def n_row_blocks(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def n_col_blocks(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    @property
+    def max_blocks_per_row(self) -> int:
+        return self.col_idx.shape[1]
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    @property
+    def nnz_blocks(self) -> Array:
+        return jnp.sum(self.block_mask)
+
+    @property
+    def block_density(self) -> Array:
+        return self.nnz_blocks / (self.n_row_blocks * self.n_col_blocks)
+
+    @property
+    def nbytes(self) -> int:
+        """Storage actually consumed (values + index + mask)."""
+        return int(
+            self.blocks.size * self.blocks.dtype.itemsize
+            + self.col_idx.size * self.col_idx.dtype.itemsize
+            + self.block_mask.size  # bool = 1 byte
+        )
+
+    @property
+    def dense_nbytes(self) -> int:
+        m, n = self.shape
+        return int(m * n * self.blocks.dtype.itemsize)
+
+    def astype(self, dtype) -> "BlockSparseMatrix":
+        return BlockSparseMatrix(
+            self.blocks.astype(dtype),
+            self.col_idx,
+            self.block_mask,
+            self.shape,
+            self.block_shape,
+        )
+
+    def map_blocks(self, fn) -> "BlockSparseMatrix":
+        """Elementwise transform of stored values (keeps topology)."""
+        blocks = jnp.where(
+            self.block_mask[:, :, None, None], fn(self.blocks), self.blocks
+        )
+        return BlockSparseMatrix(
+            blocks, self.col_idx, self.block_mask, self.shape, self.block_shape
+        )
+
+    # --- conversions ------------------------------------------------------
+    @classmethod
+    def from_dense(
+        cls,
+        dense: Array,
+        block_shape: Tuple[int, int],
+        *,
+        pad_to: int | None = None,
+    ) -> "BlockSparseMatrix":
+        """Build from a dense matrix, keeping blocks with any nonzero.
+
+        Host-side (non-jittable): topology discovery needs concrete values.
+        ``pad_to`` forces ``max_blocks_per_row`` (for shape-stable sweeps).
+        """
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        bs_r, bs_c = block_shape
+        if m % bs_r or n % bs_c:
+            raise ValueError(
+                f"shape {dense.shape} not divisible by block {block_shape}"
+            )
+        nrb, ncb = m // bs_r, n // bs_c
+        tiles = dense.reshape(nrb, bs_r, ncb, bs_c).transpose(0, 2, 1, 3)
+        nz = np.any(tiles != 0, axis=(2, 3))  # (nrb, ncb)
+        counts = nz.sum(axis=1)
+        mbpr = int(pad_to if pad_to is not None else max(int(counts.max()), 1))
+        if counts.max() > mbpr:
+            raise ValueError(f"pad_to={pad_to} < max row occupancy {counts.max()}")
+        blocks = np.zeros((nrb, mbpr, bs_r, bs_c), dense.dtype)
+        col_idx = np.zeros((nrb, mbpr), np.int32)
+        mask = np.zeros((nrb, mbpr), bool)
+        for i in range(nrb):
+            cols = np.nonzero(nz[i])[0]
+            blocks[i, : len(cols)] = tiles[i, cols]
+            col_idx[i, : len(cols)] = cols
+            mask[i, : len(cols)] = True
+        return cls(
+            jnp.asarray(blocks),
+            jnp.asarray(col_idx),
+            jnp.asarray(mask),
+            (m, n),
+            (bs_r, bs_c),
+        )
+
+    @classmethod
+    def random(
+        cls,
+        key: Array,
+        shape: Tuple[int, int],
+        block_shape: Tuple[int, int],
+        blocks_per_row: int,
+        *,
+        dtype=jnp.float32,
+        minval: float = -1.0,
+        maxval: float = 3.0,
+    ) -> "BlockSparseMatrix":
+        """Random topology + U[minval, maxval) values (paper §V-B uses
+        U[-1,3)). Exactly ``blocks_per_row`` nonzero blocks per block-row —
+        the ELL-regular analogue of the paper's Bernoulli sampling.
+        """
+        m, n = shape
+        bs_r, bs_c = block_shape
+        nrb, ncb = m // bs_r, n // bs_c
+        if blocks_per_row > ncb:
+            raise ValueError(f"blocks_per_row {blocks_per_row} > col blocks {ncb}")
+        k_idx, k_val = jax.random.split(key)
+        # Per-row random choice without replacement via argsort of uniforms.
+        u = jax.random.uniform(k_idx, (nrb, ncb))
+        col_idx = jnp.argsort(u, axis=1)[:, :blocks_per_row].astype(jnp.int32)
+        col_idx = jnp.sort(col_idx, axis=1)
+        blocks = jax.random.uniform(
+            k_val, (nrb, blocks_per_row, bs_r, bs_c), dtype, minval, maxval
+        )
+        mask = jnp.ones((nrb, blocks_per_row), bool)
+        return cls(blocks, col_idx, mask, shape, block_shape)
+
+    def to_dense(self) -> Array:
+        nrb, mbpr = self.col_idx.shape
+        bs_r, bs_c = self.block_shape
+        ncb = self.n_col_blocks
+        safe_blocks = jnp.where(
+            self.block_mask[:, :, None, None], self.blocks, 0
+        )
+        tiles = jnp.zeros((nrb, ncb, bs_r, bs_c), self.dtype)
+        rows = jnp.broadcast_to(jnp.arange(nrb)[:, None], (nrb, mbpr))
+        # scatter-add: duplicate (row, col) slots would double-count, but
+        # construction never aliases a (row, col) twice.
+        tiles = tiles.at[rows, self.col_idx].add(safe_blocks)
+        return tiles.transpose(0, 2, 1, 3).reshape(self.shape)
+
+    def transpose(self) -> "BlockSparseMatrix":
+        """Oracle-grade transpose (host-side rebuild)."""
+        return BlockSparseMatrix.from_dense(
+            np.asarray(self.to_dense()).T,
+            (self.block_shape[1], self.block_shape[0]),
+        )

@@ -1,0 +1,160 @@
+"""Optimizers built from scratch (no optax in the target environment).
+
+AdamW with optionally bf16 first/second moments (halves optimizer HBM —
+at 512 chips the m/v states of a 236B model drop from 1.9 GB to 0.9 GB
+per device), decoupled weight decay, and a linear-warmup cosine schedule.
+State pytrees mirror the param tree, so the FSDP param PartitionSpecs
+apply verbatim to optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class OptState(NamedTuple):
+    step: Array  # int32 scalar
+    mu: Any  # first moment (param-tree)
+    nu: Any  # second moment (param-tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def _tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating)
+        else a,
+        tree,
+    )
+
+
+def adamw(
+    lr: float | Callable[[Array], Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+    grad_clip_norm: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> OptState:
+        zeros = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, state_dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating)
+            else jnp.zeros(a.shape, a.dtype),
+            params,
+        )
+        return OptState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        grads = _tree_cast(grads, jnp.float32)
+        if grad_clip_norm:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(
+                lambda g: g * scale
+                if jnp.issubdtype(g.dtype, jnp.inexact)
+                else g,
+                grads,
+            )
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                return p, m, v
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m32 = b1 * m32 + (1.0 - b1) * g
+            v32 = b2 * v32 + (1.0 - b2) * g * g
+            mhat, vhat = m32 / c1, v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            newp = p.astype(jnp.float32) - lr_t * delta
+            return (
+                newp.astype(p.dtype),
+                m32.astype(state_dtype),
+                v32.astype(state_dtype),
+            )
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        newp = treedef.unflatten([o[0] for o in out])
+        newm = treedef.unflatten([o[1] for o in out])
+        newv = treedef.unflatten([o[2] for o in out])
+        return newp, OptState(step, newm, newv)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Callable, *, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> OptState:
+        zeros = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, jnp.zeros(()))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(m.dtype)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            OptState(step, treedef.unflatten([o[1] for o in out]), state.nu),
+        )
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> Array:
+    sq = sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree.leaves(tree)
+        if jnp.issubdtype(l.dtype, jnp.floating)
+    )
+    return jnp.sqrt(sq)
+
+
+def warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Callable[[Array], Array]:
+    def schedule(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (
+            final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

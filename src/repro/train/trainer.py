@@ -1,0 +1,105 @@
+"""Train-step builder: value_and_grad + microbatch gradient accumulation
++ optimizer update, as a single jit-able function.
+
+Microbatching is the memory lever for the 4k×256 train cells: the global
+batch is split into ``microbatches`` chunks scanned sequentially, so live
+activation memory is 1/microbatches of the full-batch footprint while
+arithmetic is unchanged. Gradients accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import constrain_like_params
+from repro.models.model import Model
+from repro.train.optimizer import Optimizer, OptState, global_norm
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(model: Model, optimizer: Optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, optimizer.init(params))
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves have leading dim = global_batch; with microbatching the
+    leading dim must divide evenly into ``microbatches`` chunks.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    # allow_int: sparse (BSR) weights carry int32 col_idx / bool mask
+    # leaves — their cotangents come back as float0 and are dropped below.
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)
+
+    def _float(x) -> bool:
+        return jnp.issubdtype(x.dtype, jnp.inexact)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, constrain_like_params(grads)
+
+    def accumulated(params, batch):
+        def split(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else jnp.zeros(p.shape, p.dtype),
+            params,
+        )
+
+        def body(carry, mbatch):
+            loss_sum, metrics_sum, grads = carry
+            (loss, metrics), g = grad_fn(params, mbatch)
+            g = constrain_like_params(g)
+            grads = jax.tree.map(
+                lambda a, b: a + b.astype(a.dtype) if _float(a) else a,
+                grads,
+                g,
+            )
+            grads = constrain_like_params(grads)
+            metrics_sum = jax.tree.map(lambda a, b: a + b, metrics_sum, metrics)
+            return (loss_sum + loss, metrics_sum, grads), None
+
+        init_metrics = {"ce": jnp.zeros(()), "moe_aux": jnp.zeros(())}
+        (loss_sum, metrics_sum, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(()), init_metrics, zero_grads), mb
+        )
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv if _float(g) else g, grads)
+        metrics = jax.tree.map(lambda a: a * inv, metrics_sum)
+        return loss_sum * inv, metrics, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches > 1:
+            loss, metrics, grads = accumulated(state.params, batch)
+        else:
+            loss, metrics, grads = single(state.params, batch)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real single-CPU device (the 512-device override is
+# dryrun.py-only). Force a deterministic, quiet JAX.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_default_matmul_precision", "highest")

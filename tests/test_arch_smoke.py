@@ -1,0 +1,112 @@
+"""Per-arch smoke tests (assignment requirement): every assigned
+architecture instantiates at reduced scale and runs one forward + one
+train step on CPU, asserting output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import Model
+from repro.train import adamw, make_train_step
+from repro.train.trainer import init_train_state
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _inputs(cfg, key, b, s):
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return jax.random.normal(key, (b, s, cfg.d_model))
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch, key):
+    cfg = get_config(arch).scaled_down()
+    model = Model(cfg)
+    params = model.init(key)
+    b, s = 2, 16
+    logits = model.forward(params, _inputs(cfg, key, b, s))
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step(arch, key):
+    cfg = get_config(arch).scaled_down()
+    model = Model(cfg)
+    opt = adamw(1e-3)
+    state = init_train_state(model, opt, key)
+    step = jax.jit(make_train_step(model, opt))
+    batch = {
+        "inputs": _inputs(cfg, key, 2, 16),
+        "labels": jax.random.randint(key, (2, 16), 0, cfg.vocab_size),
+    }
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state2.opt.step) == 1
+    # params actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(
+            jax.tree.leaves(state.params), jax.tree.leaves(state2.params)
+        )
+        if jnp.issubdtype(a.dtype, jnp.floating)
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch, key):
+    """Greedy decode logits at position s must match the full forward's
+    logits at position s (cache correctness across every mixer kind)."""
+    cfg = get_config(arch).scaled_down()
+    model = Model(cfg)
+    params = model.init(key)
+    b, s = 2, 12
+    inp = _inputs(cfg, key, b, s + 1)
+    full = model.forward(params, inp)
+
+    cache = model.init_cache(b, 32)
+    prefix = inp[:, :s] if cfg.input_mode == "tokens" else inp[:, :s, :]
+    logits_pre, cache = model.prefill(params, prefix, cache)
+    # last prefill logits == full forward at s-1
+    assert jnp.allclose(
+        logits_pre[:, -1], full[:, s - 1], rtol=2e-2, atol=2e-2
+    ), f"{arch}: prefill/fwd mismatch"
+    nxt = inp[:, s] if cfg.input_mode == "tokens" else inp[:, s : s + 1, :]
+    logits_dec, _ = model.decode_step(
+        params, nxt, cache, jnp.asarray(s, jnp.int32)
+    )
+    assert jnp.allclose(
+        logits_dec, full[:, s], rtol=2e-2, atol=2e-2
+    ), f"{arch}: decode/fwd mismatch"
+
+
+def test_param_counts_match_published_scale():
+    """Full configs should land near their published parameter counts."""
+    # note: moonshot is excluded — the ASSIGNED dims (48L × 64e×1408)
+    # arithmetically give ~28B, not the marketing 16B (27L); we implement
+    # the assigned config verbatim (see DESIGN.md §Arch-applicability).
+    expect = {
+        "deepseek-v2-236b": (2.0e11, 2.6e11),
+        "qwen2-72b": (6.5e10, 8.2e10),
+        "llama3.2-1b": (0.9e9, 1.6e9),
+        "jamba-v0.1-52b": (4.4e10, 6.0e10),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = Model(get_config(arch)).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+
+
+def test_active_params_moe():
+    m = Model(get_config("deepseek-v2-236b"))
+    total, active = m.param_count(), m.active_param_count()
+    assert active < 0.25 * total  # ~21B active of 236B
+    assert active > 0.02 * total

@@ -1,0 +1,133 @@
+"""BlockSparseMatrix structure, conversions, and properties."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.semiring import MAX_PLUS
+from repro.sparse import BlockSparseMatrix, ops as sops
+
+
+def test_roundtrip_from_dense():
+    rng = np.random.default_rng(0)
+    dense = rng.normal(size=(32, 48)).astype(np.float32)
+    dense[8:16, :] = 0.0  # empty block-row must still work
+    dense[:, 40:48] = 0.0
+    bsr = BlockSparseMatrix.from_dense(dense, (8, 8))
+    np.testing.assert_array_equal(bsr.to_dense(), dense)
+
+
+def test_from_dense_rejects_indivisible():
+    with pytest.raises(ValueError):
+        BlockSparseMatrix.from_dense(np.ones((10, 10)), (8, 8))
+
+
+def test_random_structure():
+    key = jax.random.PRNGKey(0)
+    bsr = BlockSparseMatrix.random(key, (64, 128), (8, 16), blocks_per_row=3)
+    assert bsr.blocks.shape == (8, 3, 8, 16)
+    assert int(bsr.nnz_blocks) == 8 * 3
+    # indices sorted + unique per row
+    ci = np.asarray(bsr.col_idx)
+    for row in ci:
+        assert len(set(row.tolist())) == len(row)
+        assert (np.sort(row) == row).all()
+    assert float(bsr.block_density) == pytest.approx(3 / 8)
+
+
+def test_values_distribution_matches_paper():
+    """Paper §V-B: weights ~ U[-1, 3)."""
+    key = jax.random.PRNGKey(1)
+    bsr = BlockSparseMatrix.random(key, (256, 256), (8, 8), blocks_per_row=16)
+    vals = np.asarray(bsr.blocks).ravel()
+    assert vals.min() >= -1.0 and vals.max() < 3.0
+    assert abs(vals.mean() - 1.0) < 0.05
+
+
+def test_nbytes_scales_with_nnz():
+    key = jax.random.PRNGKey(2)
+    sparse = BlockSparseMatrix.random(key, (512, 512), (8, 8), blocks_per_row=2)
+    denser = BlockSparseMatrix.random(key, (512, 512), (8, 8), blocks_per_row=32)
+    assert sparse.nbytes < denser.nbytes
+    assert denser.nbytes < denser.dense_nbytes * 1.1  # index overhead small
+
+
+def test_matmul_matches_dense():
+    key = jax.random.PRNGKey(3)
+    bsr = BlockSparseMatrix.random(key, (64, 96), (8, 8), blocks_per_row=4)
+    y = jax.random.normal(jax.random.PRNGKey(4), (96, 10))
+    np.testing.assert_allclose(
+        sops.bsr_matmul(bsr, y), bsr.to_dense() @ y, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_matmul_max_plus_masked_semantics():
+    """Missing blocks are -inf (no edge), NOT zero, under max-plus."""
+    key = jax.random.PRNGKey(5)
+    bsr = BlockSparseMatrix.random(key, (32, 32), (8, 8), blocks_per_row=1)
+    y = jax.random.normal(jax.random.PRNGKey(6), (32, 4))
+    out = sops.bsr_matmul(bsr, y, MAX_PLUS)
+    dense = np.asarray(bsr.to_dense())
+    # build masked dense: -inf where no stored block
+    mask = np.zeros((4, 4), bool)
+    ci = np.asarray(bsr.col_idx)
+    for i in range(4):
+        mask[i, ci[i]] = True
+    full_mask = np.repeat(np.repeat(mask, 8, 0), 8, 1)
+    masked = np.where(full_mask, dense, -np.inf)
+    ref = np.max(masked[:, :, None] + np.asarray(y)[None], axis=1)
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+def test_map_blocks_keeps_topology():
+    key = jax.random.PRNGKey(7)
+    bsr = BlockSparseMatrix.random(key, (32, 32), (8, 8), blocks_per_row=2)
+    doubled = bsr.map_blocks(lambda b: b * 2)
+    np.testing.assert_allclose(
+        doubled.to_dense(), bsr.to_dense() * 2, rtol=1e-6
+    )
+
+
+def test_pytree_roundtrip():
+    key = jax.random.PRNGKey(8)
+    bsr = BlockSparseMatrix.random(key, (16, 16), (8, 8), blocks_per_row=1)
+    leaves, treedef = jax.tree_util.tree_flatten(bsr)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.shape == bsr.shape
+    np.testing.assert_array_equal(rebuilt.to_dense(), bsr.to_dense())
+
+
+def test_jit_through_bsr():
+    key = jax.random.PRNGKey(9)
+    bsr = BlockSparseMatrix.random(key, (32, 32), (8, 8), blocks_per_row=2)
+    y = jax.random.normal(jax.random.PRNGKey(10), (32, 4))
+
+    @jax.jit
+    def f(a, b):
+        return sops.bsr_matmul(a, b)
+
+    np.testing.assert_allclose(f(bsr, y), sops.bsr_matmul(bsr, y), rtol=1e-6)
+
+
+@hypothesis.given(
+    nrb=st.integers(1, 4),
+    ncb=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_roundtrip_property(nrb, ncb, seed, data):
+    """from_dense(to_dense(x)) == x for any block structure."""
+    bpr = data.draw(st.integers(1, ncb))
+    key = jax.random.PRNGKey(seed)
+    bsr = BlockSparseMatrix.random(
+        key, (8 * nrb, 8 * ncb), (8, 8), blocks_per_row=bpr
+    )
+    dense = np.asarray(bsr.to_dense())
+    rebuilt = BlockSparseMatrix.from_dense(dense, (8, 8))
+    np.testing.assert_array_equal(rebuilt.to_dense(), dense)
+    # storage really is ∝ stored blocks
+    assert bsr.blocks.size == nrb * bpr * 64

@@ -1,0 +1,102 @@
+"""GraphBLAS primitive semantics (paper §IV usage patterns)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MAX_PLUS, PLUS_TIMES, graphblas as gb
+from repro.sparse import BlockSparseMatrix
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(42)
+
+
+def test_mxm_dense(rng):
+    a = jnp.asarray(rng.normal(size=(6, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    np.testing.assert_allclose(gb.mxm(a, b), a @ b, rtol=1e-5)
+
+
+def test_mxm_sparse_dispatch(rng):
+    key = jax.random.PRNGKey(0)
+    a = BlockSparseMatrix.random(key, (32, 32), (8, 8), blocks_per_row=2)
+    b = jnp.asarray(rng.normal(size=(32, 7)).astype(np.float32))
+    np.testing.assert_allclose(
+        gb.mxm(a, b), a.to_dense() @ b, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_mxv_vxm(rng):
+    a = jnp.asarray(rng.normal(size=(5, 5)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    np.testing.assert_allclose(gb.mxv(a, v), a @ v, rtol=1e-5)
+    np.testing.assert_allclose(gb.vxm(v, a), v @ a, rtol=1e-5)
+
+
+def test_ewise_ops_max_plus():
+    """The paper's bias-add (eWiseMult ⊗=+) and ReLU (eWiseAdd ⊕=max)."""
+    y = jnp.array([[-1.0, 2.0], [3.0, -4.0]])
+    b = jnp.array([[0.5, 0.5], [1.0, 1.0]])
+    biased = gb.ewise_mult(y, b, MAX_PLUS)
+    np.testing.assert_array_equal(biased, y + b)
+    relu = gb.ewise_add(biased, jnp.zeros_like(y), MAX_PLUS)
+    np.testing.assert_array_equal(relu, np.maximum(np.asarray(y + b), 0))
+
+
+def test_mask_semantics(rng):
+    a = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    prev = jnp.zeros((4, 4))
+    mask = jnp.asarray(rng.random((4, 4)) > 0.5)
+    out = gb.mxm(a, b, PLUS_TIMES, mask=mask, prev=prev)
+    full = np.asarray(a @ b)
+    np.testing.assert_allclose(
+        out, np.where(np.asarray(mask), full, 0.0), rtol=1e-5
+    )
+
+
+def test_accum_semantics(rng):
+    a = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    prev = jnp.ones((4, 4))
+    out = gb.mxm(a, b, PLUS_TIMES, accum=jnp.add, prev=prev)
+    np.testing.assert_allclose(out, np.asarray(a @ b) + 1.0, rtol=1e-5)
+
+
+def test_accum_requires_prev(rng):
+    a = jnp.ones((2, 2))
+    with pytest.raises(ValueError):
+        gb.mxm(a, a, PLUS_TIMES, accum=jnp.add)
+
+
+def test_reduce(rng):
+    a = jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))
+    np.testing.assert_allclose(
+        gb.reduce_rows(a, PLUS_TIMES), np.asarray(a).sum(-1), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        gb.reduce_scalar(a, MAX_PLUS), np.asarray(a).max(), rtol=1e-6
+    )
+
+
+def test_select_extract_assign(rng):
+    a = jnp.asarray(rng.normal(size=(5, 5)).astype(np.float32))
+    sel = gb.select(a, lambda x: x > 0)
+    np.testing.assert_array_equal(
+        sel, np.where(np.asarray(a) > 0, np.asarray(a), 0.0)
+    )
+    rows, cols = jnp.array([0, 2]), jnp.array([1, 3])
+    sub = gb.extract(a, rows, cols)
+    assert sub.shape == (2, 2)
+    a2 = gb.assign(a, rows, cols, jnp.zeros((2, 2)))
+    assert float(a2[0, 1]) == 0.0 and float(a2[2, 3]) == 0.0
+
+
+def test_transpose_sparse():
+    key = jax.random.PRNGKey(1)
+    a = BlockSparseMatrix.random(key, (16, 32), (8, 8), blocks_per_row=2)
+    at = gb.transpose(a)
+    np.testing.assert_allclose(at.to_dense(), a.to_dense().T, rtol=1e-6)

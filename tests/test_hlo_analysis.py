@@ -1,0 +1,126 @@
+"""Unit + property tests for the loop-aware HLO accounting (the roofline
+pipeline's measurement layer — correctness here is what makes §Perf
+iterations trustworthy)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.launch import hlo_analysis as H
+
+SYNTH = """
+HloModule jit_step
+
+%body.1 (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,64]{1,0} constant({...})
+  %dot.1 = f32[128,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,64]{1,0} all-reduce(%dot.1), replica_groups=[4,2]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%i, %x)
+}
+
+%cond.1 (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main.1 (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128]{1,0} parameter(0)
+  %dot.0 = f32[128,128]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[256,128]{1,0} all-gather(%dot.0), replica_groups=[2,4]<=[8], dimensions={0}
+  %w2 = (s32[], f32[128,128]{1,0}) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_loop_multiplier_and_dot_flops():
+    stats = H.analyze(SYNTH)
+    # entry dot: 2*128*128*128 ; body dot: 2*128*64*128 * 10 trips
+    expect = 2 * 128 * 128 * 128 + 10 * 2 * 128 * 64 * 128
+    assert stats.flops == expect
+
+
+def test_collective_accounting():
+    stats = H.analyze(SYNTH)
+    # all-gather result 256*128*4 bytes, g=4 → (3/4)·b ; AR in body ×10
+    ag = (3 / 4) * 256 * 128 * 4
+    ar = 10 * 2 * (1 / 2) * 128 * 64 * 4  # g=2 → 2·(1/2)·b
+    assert stats.per_kind_bytes["all-gather"] == pytest.approx(ag)
+    assert stats.per_kind_bytes["all-reduce"] == pytest.approx(ar)
+    assert stats.collective_bytes == pytest.approx(ag + ar)
+
+
+def test_bytes_exclude_control_flow_and_params():
+    stats = H.analyze(SYNTH)
+    # while/tuple/gte/parameter contribute nothing; dots+collectives do
+    assert stats.bytes_accessed > 0
+    # body executes 10×: its dot touches (128·128 + 128·64 + 128·64)·4
+    body_dot = 10 * (128 * 128 + 128 * 64 + 128 * 64) * 4
+    assert stats.bytes_accessed >= body_dot
+
+
+@given(
+    g=st.integers(2, 512),
+    nbytes=st.integers(4, 10**9),
+)
+@settings(max_examples=50, deadline=None)
+def test_wire_byte_formulas_properties(g, nbytes):
+    ar = H._wire_bytes("all-reduce", nbytes, g)
+    ag = H._wire_bytes("all-gather", nbytes, g)
+    rs = H._wire_bytes("reduce-scatter", nbytes, g)
+    cp = H._wire_bytes("collective-permute", nbytes, g)
+    # ring AR = AG of full + RS of full (classic identity, same result size)
+    assert ar == pytest.approx(2 * ag)
+    assert cp == nbytes
+    assert rs == (g - 1) * nbytes
+    assert H._wire_bytes("all-reduce", nbytes, 1) == 0.0
+
+
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_shape_bytes(dims):
+    s = f"f32[{','.join(map(str, dims))}]{{0}}"
+    n = 1
+    for d in dims:
+        n *= d
+    assert H._shape_bytes(s) == 4 * n
+    s16 = f"bf16[{','.join(map(str, dims))}]"
+    assert H._shape_bytes(s16) == 2 * n
+
+
+def test_roofline_terms():
+    t = H.roofline_terms(
+        flops_per_device=H.PEAK_FLOPS,  # exactly 1 second of compute
+        bytes_per_device=H.HBM_BW / 2,  # 0.5 s
+        collective_bytes_per_device=H.ICI_BW / 4,  # 0.25 s
+    )
+    assert t["dominant"] == "t_compute_s"
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    t2 = H.roofline_terms(
+        flops_per_device=H.PEAK_FLOPS / 10,
+        bytes_per_device=H.HBM_BW,  # memory-bound
+        collective_bytes_per_device=0,
+    )
+    assert t2["dominant"] == "t_memory_s"
+    assert t2["roofline_fraction"] == pytest.approx(0.1)
+
+
+def test_logical_line_joining():
+    wrapped = (
+        "ENTRY %e (a: f32[4]) -> f32[4] {\n"
+        "  %a = f32[4]{0} parameter(0)\n"
+        "  %w = (s32[], f32[4]{0},\n"
+        "    f32[8]{0}) while(%t), condition=%c,\n"
+        "    body=%b, backend_config={\"known_trip_count\":{\"n\":\"3\"}}\n"
+        "  ROOT %r = f32[4]{0} add(%a, %a)\n"
+        "}\n"
+    )
+    comps = H._parse_computations(wrapped)
+    instrs = comps["e"].instrs
+    ops = [i.opcode for i in instrs]
+    assert "while" in ops and "add" in ops
+    edges = H._call_edges(comps["e"])
+    assert ("b", 3, "body") in edges

@@ -1,0 +1,102 @@
+"""Sparsification pipeline (Deep Compression; paper §I)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning
+from repro.sparse import BlockSparseMatrix
+
+
+def test_magnitude_prune_density():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    pruned = pruning.magnitude_prune(w, 0.25)
+    nnz = float((pruned != 0).mean())
+    assert abs(nnz - 0.25) < 0.02
+
+
+def test_magnitude_prune_keeps_largest():
+    w = jnp.array([[1.0, -5.0], [0.1, 3.0]])
+    pruned = pruning.magnitude_prune(w, 0.5)
+    np.testing.assert_array_equal(pruned, [[0.0, -5.0], [0.0, 3.0]])
+
+
+def test_magnitude_prune_idempotent():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    once = pruning.magnitude_prune(w, 0.3)
+    twice = pruning.magnitude_prune(once, 0.3)
+    np.testing.assert_array_equal(once, twice)
+
+
+def test_magnitude_prune_validates():
+    with pytest.raises(ValueError):
+        pruning.magnitude_prune(jnp.ones((2, 2)), 0.0)
+
+
+def test_block_prune_mask_row_budget():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    mask = pruning.block_prune_mask(w, (8, 8), blocks_per_row=3)
+    assert mask.shape == (8, 8)
+    np.testing.assert_array_equal(np.asarray(mask).sum(1), 3)
+
+
+def test_block_prune_returns_ell_bsr():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    bsr = pruning.block_prune(w, (8, 8), blocks_per_row=2)
+    assert isinstance(bsr, BlockSparseMatrix)
+    assert bsr.max_blocks_per_row == 2
+    # kept blocks are the top-2 by L1 per row
+    scores = np.asarray(pruning.block_scores(w, (8, 8)))
+    ci = np.asarray(bsr.col_idx)
+    for i in range(8):
+        top2 = set(np.argsort(-scores[i])[:2].tolist())
+        assert set(ci[i].tolist()) == top2
+
+
+def test_block_prune_preserves_kept_values():
+    rng = np.random.default_rng(4)
+    w = np.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    bsr = pruning.block_prune(jnp.asarray(w), (8, 8), blocks_per_row=4)
+    np.testing.assert_allclose(bsr.to_dense(), w, rtol=1e-6)  # 4/4 = keep all
+
+
+def test_apply_block_mask():
+    w = jnp.ones((16, 16))
+    mask = jnp.zeros((2, 2), bool).at[0, 0].set(True)
+    out = pruning.apply_block_mask(w, mask, (8, 8))
+    assert float(out[:8, :8].sum()) == 64.0
+    assert float(out.sum()) == 64.0
+
+
+def test_schedule():
+    sched = pruning.PruneSchedule(steps=[10, 20], densities=[0.5, 0.25])
+    assert sched.density_at(0) == 1.0
+    assert sched.density_at(10) == 0.5
+    assert sched.density_at(25) == 0.25
+    assert sched.is_prune_step(20) and not sched.is_prune_step(15)
+    with pytest.raises(ValueError):
+        pruning.PruneSchedule(steps=[1, 2], densities=[0.2, 0.5])
+
+
+@hypothesis.given(
+    density=st.floats(0.05, 1.0), seed=st.integers(0, 2**31 - 1)
+)
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_prune_density_property(density, seed):
+    """Achieved density within one element of requested; energy kept is
+    maximal (no dropped element larger than a kept one)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (16, 16))
+    pruned = pruning.magnitude_prune(w, density)
+    nnz = int((np.asarray(pruned) != 0).sum())
+    assert abs(nnz - round(256 * density)) <= 1
+    kept = np.abs(np.asarray(pruned))[np.asarray(pruned) != 0]
+    dropped = np.abs(np.asarray(w))[np.asarray(pruned) == 0]
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max() - 1e-6

@@ -1,0 +1,112 @@
+"""Semiring algebra laws (paper §II-C/§II-D) — unit + property tests."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import semiring as sr
+
+ALL = list(sr.REGISTRY.values())
+# Semirings whose ops are exact on float32 (max/min/add of small ints) —
+# associativity/distributivity can be asserted exactly.
+EXACT = [sr.MAX_PLUS, sr.MIN_PLUS, sr.MAX_MIN, sr.MIN_MAX]
+
+small_ints = hnp.arrays(
+    np.float32, (7,), elements=st.integers(-8, 8).map(float)
+)
+
+
+@pytest.mark.parametrize("s", ALL, ids=lambda s: s.name)
+def test_additive_identity(s):
+    a = jnp.array([-3.0, 0.0, 2.5, 7.0])
+    if s.name in ("lor_land", "xor_and"):
+        a = a != 0
+    z = jnp.full_like(a, s.zero)
+    np.testing.assert_array_equal(s.add(a, z), a)
+
+
+@pytest.mark.parametrize("s", ALL, ids=lambda s: s.name)
+def test_multiplicative_annihilator(s):
+    a = jnp.array([-3.0, 0.0, 2.5, 7.0])
+    if s.name in ("lor_land", "xor_and"):
+        a = a != 0
+    z = jnp.full_like(a, s.zero)
+    out = s.mul(a, z)
+    np.testing.assert_array_equal(out, z)
+
+
+@hypothesis.given(a=small_ints, b=small_ints, c=small_ints)
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_semiring_laws_property(a, b, c):
+    for s in EXACT:
+        aj, bj, cj = jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)
+        # additive commutativity / associativity
+        np.testing.assert_array_equal(s.add(aj, bj), s.add(bj, aj))
+        np.testing.assert_array_equal(
+            s.add(s.add(aj, bj), cj), s.add(aj, s.add(bj, cj))
+        )
+        # multiplicative associativity
+        np.testing.assert_array_equal(
+            s.mul(s.mul(aj, bj), cj), s.mul(aj, s.mul(bj, cj))
+        )
+        # distributivity
+        np.testing.assert_array_equal(
+            s.mul(aj, s.add(bj, cj)), s.add(s.mul(aj, bj), s.mul(aj, cj))
+        )
+
+
+@hypothesis.given(
+    a=hnp.arrays(np.float32, (4, 5), elements=st.integers(-8, 8).map(float)),
+    b=hnp.arrays(np.float32, (5, 3), elements=st.integers(-8, 8).map(float)),
+    c=hnp.arrays(np.float32, (3, 2), elements=st.integers(-8, 8).map(float)),
+)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_matmul_associativity_property(a, b, c):
+    """(AB)C == A(BC) over exact semirings (paper §II-D)."""
+    for s in EXACT:
+        left = s.matmul(s.matmul(jnp.asarray(a), jnp.asarray(b)), jnp.asarray(c))
+        right = s.matmul(jnp.asarray(a), s.matmul(jnp.asarray(b), jnp.asarray(c)))
+        np.testing.assert_array_equal(left, right)
+
+
+def test_plus_times_matches_matmul():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(6, 9)).astype(np.float32)
+    b = rng.normal(size=(9, 4)).astype(np.float32)
+    np.testing.assert_allclose(
+        sr.PLUS_TIMES.matmul(jnp.asarray(a), jnp.asarray(b)),
+        a @ b,
+        rtol=1e-5,
+    )
+
+
+def test_max_plus_matmul_reference():
+    a = jnp.array([[1.0, -2.0], [0.0, 3.0]])
+    b = jnp.array([[0.5, 1.0], [2.0, -1.0]])
+    out = sr.MAX_PLUS.matmul(a, b)
+    ref = np.max(np.asarray(a)[:, :, None] + np.asarray(b)[None], axis=1)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_matvec_vecmat():
+    a = jnp.arange(12.0).reshape(3, 4)
+    v = jnp.arange(4.0)
+    np.testing.assert_allclose(sr.PLUS_TIMES.matvec(a, v), a @ v, rtol=1e-6)
+    w = jnp.arange(3.0)
+    np.testing.assert_allclose(sr.PLUS_TIMES.vecmat(w, a), w @ a, rtol=1e-6)
+
+
+def test_log_plus_is_smooth_max():
+    a = jnp.array([[5.0, -50.0]])
+    b = jnp.array([[1.0], [0.0]])
+    out = sr.LOG_PLUS.matmul(a, b)
+    assert abs(float(out[0, 0]) - 6.0) < 1e-3  # dominated by the max term
+
+
+def test_registry_lookup():
+    assert sr.get_semiring("max_plus") is sr.MAX_PLUS
+    with pytest.raises(KeyError):
+        sr.get_semiring("nope")
