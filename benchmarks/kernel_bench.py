@@ -1,0 +1,205 @@
+"""Kernel-layer benchmark: ELL grid vs occupancy-exact CSR grid vs
+VMEM-resident fused multi-layer vs dense, across inverse sparsity and
+row skew. ``python -m benchmarks.kernel_bench [--quick]``.
+
+Two kinds of measurement, kept separate on purpose:
+
+* **grid steps** — the architecture truth this PR is about. The ELL
+  kernel executes ``nrb × max_blocks_per_row × n_tiles`` steps (the pad
+  is paid on every row); the CSR kernel executes ``total_nnz_blocks ×
+  n_tiles``. On TPU every step is one (MXU matmul + B-panel DMA) slot,
+  so the step ratio IS the expected wall-clock/bandwidth ratio. Steps
+  are exact and hardware-independent.
+* **wall-clock** — measured on whatever backend is running. On this
+  CPU-only container the Pallas kernels execute via ``interpret=True``
+  (a correctness mode, ~10⁴× slower than compiled, timing meaningless),
+  so wall-clock rows time the pure-jnp XLA paths (``sparse.ops``) that
+  mirror each kernel's work scaling, plus the dense arm.
+
+Writes ``BENCH_kernels.json`` at the repo root so subsequent PRs can
+track the trajectory:
+  steps:  per-topology {ell, csr} grid steps + the ratio
+  fused:  pallas_call counts (L vs 1) + layered/fused XLA wall-clock
+  sweep:  inverse-sparsity × skew wall-clock for the XLA arms
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import dnn
+from repro.kernels import bcsr_spmm as bcsr_kernel
+from repro.kernels import ops as kernel_ops
+from repro.sparse import BlockCSRMatrix, BlockSparseMatrix
+from repro.sparse import ops as sparse_ops
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+
+
+def _grid_steps_ell(a: BlockSparseMatrix, n: int, block_n: int = 128) -> int:
+    nrb, mbpr = a.col_idx.shape
+    return nrb * mbpr * -(-n // block_n)
+
+
+def topology_arms(m: int, block: int, total_blocks: int, skew: float, n: int):
+    """Build one topology in both layouts and report steps + times."""
+    c = BlockCSRMatrix.random_skewed(
+        seed=int(1e3 * skew) + m, shape=(m, m), block_shape=(block, block),
+        total_blocks=total_blocks, skew=skew,
+    )
+    a = c.to_bsr()
+    counts = np.diff(np.asarray(c.row_ptr))
+
+    ell_steps = _grid_steps_ell(a, n)
+    csr_steps = bcsr_kernel.grid_steps(c, n)
+
+    b = jax.random.uniform(jax.random.PRNGKey(0), (m, n), jnp.float32)
+    bias = jnp.zeros((m,), jnp.float32)
+    t_ell = timeit(
+        jax.jit(lambda a_, b_: sparse_ops.bsr_matmul_fused_relu(a_, b_, bias)),
+        a, b,
+    )
+    t_csr = timeit(
+        jax.jit(lambda c_, b_: sparse_ops.bcsr_matmul_fused_relu(c_, b_, bias)),
+        c, b,
+    )
+    w_dense = a.to_dense()
+    t_dense = timeit(
+        jax.jit(lambda w_, b_: sparse_ops.dense_matmul_fused_relu(w_, b_, bias)),
+        w_dense, b,
+    )
+    return {
+        "m": m,
+        "block": block,
+        "n": n,
+        "nnz_blocks": int(total_blocks),
+        "skew": skew,
+        "max_blocks_per_row": int(counts.max()),
+        "mean_blocks_per_row": float(counts.mean()),
+        "grid_steps_ell": ell_steps,
+        "grid_steps_csr": csr_steps,
+        "step_ratio_ell_over_csr": ell_steps / csr_steps,
+        "xla_time_s": {
+            "ell": t_ell,
+            "csr": t_csr,
+            "dense": t_dense,
+        },
+    }
+
+
+def fused_arm(m: int, L: int, bpr: int, n: int):
+    """Layered vs single-call fused forward (counts + XLA wall-clock)."""
+    ws = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(i), (m, m), (16, 16), blocks_per_row=bpr
+        )
+        for i in range(L)
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+    y0 = jax.random.uniform(jax.random.PRNGKey(99), (m, n), jnp.float32)
+
+    stacked_w, stacked_b = dnn.stack_bsr(ws), jnp.stack(bs)
+    jaxpr = jax.make_jaxpr(
+        lambda w, b, y: kernel_ops.fused_mlp_forward(w, b, y)
+    )(stacked_w, stacked_b, y0)
+    fused_calls = str(jaxpr).count("pallas_call")
+
+    t_layered = timeit(
+        jax.jit(lambda ws_, bs_, y: dnn.dnn_forward(ws_, bs_, y, fused=True)),
+        ws, bs, y0,
+    )
+    t_scan = timeit(
+        jax.jit(dnn.dnn_forward_scan), stacked_w, stacked_b, y0
+    )
+    # correctness tie-in: fused kernel (interpret) == layered, one call
+    out_fused = kernel_ops.fused_mlp_forward(stacked_w, stacked_b, y0)
+    out_layered = dnn.dnn_forward(ws, bs, y0, fused=True)
+    max_rel = float(
+        jnp.max(
+            jnp.abs(out_fused - out_layered)
+            / jnp.maximum(jnp.abs(out_layered), 1.0)
+        )
+    )
+    return {
+        "m": m,
+        "layers": L,
+        "blocks_per_row": bpr,
+        "n": n,
+        "pallas_calls_fused": fused_calls,
+        "pallas_calls_layered": L,
+        "hbm_activation_roundtrips_eliminated": L - 1,
+        "max_rel_err_vs_layered": max_rel,
+        "xla_time_s": {"layered_loop": t_layered, "layered_scan": t_scan},
+    }
+
+
+def run(quick: bool = False):
+    n = 64
+    sizes = [256] if quick else [256, 512, 1024]
+    skews = [0.0, 0.9] if quick else [0.0, 0.5, 0.9]
+    inv_sparsities = [8, 32] if quick else [8, 32, 128]
+
+    topologies = []
+    for m in sizes:
+        block = 16
+        ncb = m // block
+        for inv in inv_sparsities:
+            total = max((m // block) * max(ncb // inv, 1), 1)
+            for skew in skews:
+                r = topology_arms(m, block, total, skew, n)
+                topologies.append(r)
+                print(
+                    f"m={m:5d} inv={inv:4d} skew={skew:.1f}  "
+                    f"steps ell={r['grid_steps_ell']:6d} "
+                    f"csr={r['grid_steps_csr']:6d} "
+                    f"(ratio {r['step_ratio_ell_over_csr']:.2f})  "
+                    f"xla ell={r['xla_time_s']['ell']*1e3:7.2f}ms "
+                    f"csr={r['xla_time_s']['csr']*1e3:7.2f}ms "
+                    f"dense={r['xla_time_s']['dense']*1e3:7.2f}ms",
+                    flush=True,
+                )
+
+    fused = fused_arm(m=256, L=4 if quick else 8, bpr=3, n=128)
+    print(
+        f"fused: L={fused['layers']} pallas_calls "
+        f"{fused['pallas_calls_layered']}→{fused['pallas_calls_fused']}, "
+        f"max rel err {fused['max_rel_err_vs_layered']:.2e}",
+        flush=True,
+    )
+
+    # The tentpole invariants, asserted on every benchmark run:
+    for r in topologies:
+        if r["max_blocks_per_row"] > r["mean_blocks_per_row"]:
+            assert r["grid_steps_csr"] < r["grid_steps_ell"], r
+    assert fused["pallas_calls_fused"] == 1
+    assert fused["max_rel_err_vs_layered"] <= 1e-5
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_kernels": kernel_ops.auto_interpret(),
+        "topologies": topologies,
+        "fused": fused,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {OUT_PATH}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

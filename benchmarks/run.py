@@ -1,6 +1,8 @@
 """Benchmark orchestrator: ``python -m benchmarks.run [--full]``.
 
 One benchmark per paper table/figure (DESIGN.md §9):
+  kernel_bench  — ELL vs occupancy-exact CSR grid vs fused-multilayer vs
+                  dense kernel arms (writes BENCH_kernels.json at repo root)
   fig5_sweep    — sparse vs dense forward time vs inverse sparsity (Fig. 5)
   fig7_scaling  — scaling parameters of those curves (Fig. 7)
   fig6_parallel — partitioned work-per-device analogue of thread scaling
@@ -37,6 +39,8 @@ def main():
     args = ap.parse_args()
 
     fig5_args = ["--quick"] if args.quick else (["--full"] if args.full else [])
+    kb_args = ["--quick"] if args.quick else []
+    _run("benchmarks.kernel_bench", *kb_args)
     _run("benchmarks.fig5_sweep", *fig5_args)
     _run("benchmarks.fig7_scaling")
     _run("benchmarks.memory_table")

@@ -1,6 +1,6 @@
 """The paper's ReLU DNN (§III, §IV Fig. 4) in JAX.
 
-Two execution modes:
+Execution modes:
 
 * ``dnn_forward(..., fused=False)`` — **paper-faithful**: each layer is
   exactly the three GraphBLAS calls of Fig. 4:
@@ -12,9 +12,18 @@ Two execution modes:
 * ``fused=True`` — beyond-paper: one fused sparse-matmul + bias + max
   epilogue per layer (single activation stream; see DESIGN.md §2).
 
-Weights may be dense arrays or :class:`BlockSparseMatrix` (homogeneous
-list). ``dnn_forward_scan`` is the stacked/scanned variant used inside
-jit for deep networks (one layer traced once).
+* ``dnn_forward_resident`` — beyond-paper, deepest fusion: ONE Pallas
+  call for the whole homogeneous square stack, activations resident in
+  VMEM across layers (``repro.kernels.fused_mlp``); falls back to the
+  layered path when ineligible.
+
+Weight layouts: dense arrays, ELL-padded :class:`BlockSparseMatrix`
+(regular topologies) or occupancy-exact :class:`BlockCSRMatrix`
+(skewed/pruned topologies — kernel grid ∝ true nnz blocks).
+``preferred_layout``/``to_preferred_layout`` encode the choice; every
+entry point dispatches on the weight type. ``dnn_forward_scan`` is the
+stacked/scanned variant used inside jit for deep networks (one layer
+traced once).
 """
 
 from __future__ import annotations
@@ -27,15 +36,44 @@ import jax.numpy as jnp
 from repro.core import graphblas as gb
 from repro.core.semiring import MAX_PLUS, PLUS_TIMES
 from repro.sparse import ops as sparse_ops
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
-Weight = Union[Array, BlockSparseMatrix]
+Weight = Union[Array, BlockSparseMatrix, BlockCSRMatrix]
+
+# A block-row whose ELL pad wastes more than this fraction of its slots
+# (1 - nnz / (nrb·mbpr)) is better served by the occupancy-exact grid.
+ELL_WASTE_THRESHOLD = 0.25
+
+
+def preferred_layout(w: BlockSparseMatrix) -> str:
+    """``"ell"`` or ``"bcsr"`` — which kernel grid wastes less work.
+
+    The ELL grid runs ``nrb × max_blocks_per_row`` steps; the CSR grid
+    runs ``nnz_blocks``. Choose CSR once the pad's wasted fraction
+    crosses :data:`ELL_WASTE_THRESHOLD` (host-side: reads the mask).
+    """
+    nrb, mbpr = w.col_idx.shape
+    nnz = int(jax.device_get(w.nnz_blocks))
+    waste = 1.0 - nnz / float(nrb * mbpr)
+    return "bcsr" if waste > ELL_WASTE_THRESHOLD else "ell"
+
+
+def to_preferred_layout(w: Weight) -> Weight:
+    """Re-layout an ELL weight to block-CSR when its occupancy is skewed
+    enough for the occupancy-exact grid to win (host-side; identity for
+    dense and already-CSR weights)."""
+    if isinstance(w, BlockSparseMatrix) and preferred_layout(w) == "bcsr":
+        return BlockCSRMatrix.from_bsr(w)
+    return w
 
 
 def dnn_layer(w: Weight, y: Array, b: Array, *, fused: bool = True) -> Array:
     """One forward layer: max(W·Y + b⊗1ᵀ, 0).  y: (m, n); b: (m,)."""
     if fused:
+        if isinstance(w, BlockCSRMatrix):
+            return sparse_ops.bcsr_matmul_fused_relu(w, y, b)
         if isinstance(w, BlockSparseMatrix):
             return sparse_ops.bsr_matmul_fused_relu(w, y, b)
         return sparse_ops.dense_matmul_fused_relu(w, y, b)
@@ -74,6 +112,61 @@ def dnn_forward_all(
     for w, b in zip(weights, biases):
         ys.append(dnn_layer(w, ys[-1], b, fused=fused))
     return ys
+
+
+def resident_eligible(
+    weights: Sequence[Weight], *, block_n: int = 128
+) -> bool:
+    """Can this stack run through the single-call VMEM-resident kernel?
+
+    Requires: ≥1 layer, all layers BSR with identical square shape /
+    block shape / pad width, and the activation panel (at this
+    ``block_n``) within the VMEM budget. (BlockCSRMatrix stacks take the
+    layered path — per-layer ``total_blocks`` varies, so there is no
+    static stacked layout.)
+    """
+    from repro.kernels import fused_mlp as _fmlp
+
+    if not weights:
+        return False
+    first = weights[0]
+    if not isinstance(first, BlockSparseMatrix):
+        return False
+    if not all(
+        isinstance(w, BlockSparseMatrix)
+        and w.shape == first.shape
+        and w.block_shape == first.block_shape
+        and w.max_blocks_per_row == first.max_blocks_per_row
+        for w in weights
+    ):
+        return False
+    return _fmlp.fused_mlp_eligible(first, block_n)
+
+
+def dnn_forward_resident(
+    weights: Sequence[Weight],
+    biases: Sequence[Array],
+    y0: Array,
+    *,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """L-layer forward with the activation panel resident in VMEM.
+
+    One ``pallas_call`` total (vs L for the layered path): eliminates
+    L−1 HBM activation round-trips. Falls back to ``dnn_forward(...,
+    fused=True)`` when the stack is ineligible (heterogeneous, dense,
+    CSR-layout, non-square, or panel too large for VMEM).
+    """
+    if not resident_eligible(weights, block_n=block_n):
+        return dnn_forward(weights, biases, y0, fused=True)
+    from repro.kernels import ops as kernel_ops
+
+    stacked_w = stack_bsr(list(weights))
+    stacked_b = jnp.stack(list(biases))
+    return kernel_ops.fused_mlp_forward(
+        stacked_w, stacked_b, y0, block_n=block_n, interpret=interpret
+    )
 
 
 def dnn_forward_scan(

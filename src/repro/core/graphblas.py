@@ -19,10 +19,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.semiring import PLUS_TIMES, Semiring
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
-MatrixLike = Union[Array, BlockSparseMatrix]
+MatrixLike = Union[Array, BlockSparseMatrix, BlockCSRMatrix]
+
+
+def _sparse_matmul_for(a: MatrixLike):
+    """The layout's semiring matmul, or None for dense operands."""
+    if isinstance(a, BlockCSRMatrix):
+        from repro.sparse import ops as sparse_ops
+
+        return sparse_ops.bcsr_matmul
+    if isinstance(a, BlockSparseMatrix):
+        from repro.sparse import ops as sparse_ops
+
+        return sparse_ops.bsr_matmul
+    return None
 
 
 def _apply_mask_and_accum(
@@ -56,10 +70,9 @@ def mxm(
     ``a`` may be dense or BSR; ``b`` is dense (the paper keeps Y dense,
     §V-B: "we only consider dense Y matrices").
     """
-    if isinstance(a, BlockSparseMatrix):
-        from repro.sparse import ops as sparse_ops
-
-        out = sparse_ops.bsr_matmul(a, b, semiring=semiring)
+    matmul = _sparse_matmul_for(a)
+    if matmul is not None:
+        out = matmul(a, b, semiring=semiring)
     else:
         out = semiring.matmul(a, b)
     return _apply_mask_and_accum(out, prev, mask, accum)
@@ -89,10 +102,9 @@ def vxm(
     prev: Optional[Array] = None,
 ) -> Array:
     """wᵀ = vᵀ ⊕.⊗ A (GrB_vxm)."""
-    if isinstance(a, BlockSparseMatrix):
-        from repro.sparse import ops as sparse_ops
-
-        out = sparse_ops.bsr_matmul(a.transpose(), v[:, None], semiring)[:, 0]
+    matmul = _sparse_matmul_for(a)
+    if matmul is not None:
+        out = matmul(a.transpose(), v[:, None], semiring=semiring)[:, 0]
     else:
         out = semiring.vecmat(v, a)
     return _apply_mask_and_accum(out, prev, mask, accum)
@@ -165,7 +177,7 @@ def select(a: Array, predicate: Callable[[Array], Array], fill=0.0) -> Array:
 
 
 def transpose(a: MatrixLike) -> MatrixLike:
-    if isinstance(a, BlockSparseMatrix):
+    if isinstance(a, (BlockSparseMatrix, BlockCSRMatrix)):
         return a.transpose()
     return a.T
 

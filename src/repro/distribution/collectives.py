@@ -45,7 +45,9 @@ def compressed_psum_mean(
 
     Returns (mean, new_error). Call inside ``shard_map``.
     """
-    n = jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size only exists in newer jax; psum of 1 is the
+    # portable spelling (constant-folded by the partitioner, no wire cost).
+    n = jax.lax.psum(1, axis_name)
     xe = x + err
     q, scale = quantize_int8(xe, axis_name)
     dequant_local = q.astype(x.dtype) * scale

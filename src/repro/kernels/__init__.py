@@ -1,3 +1,20 @@
+"""Pallas TPU kernels + jit'd wrappers (``ops``) and jnp oracles (``ref``).
+
+Kernel menu and when dispatch picks which (see ``repro.core.dnn``):
+
+  semiring_matmul — dense ⊕.⊗ with fused bias/ReLU epilogue; the BLAS
+      arm and the fallback for weights with no sparse structure.
+  bsr_spmm        — ELL-padded BSR × dense. Grid ``(nrb, n_tiles,
+      max_blocks_per_row)``: best for *regular* topologies where every
+      block-row stores ≈ the same number of blocks.
+  bcsr_spmm       — occupancy-exact block-CSR × dense. Grid ``(n_tiles,
+      total_nnz_blocks)``: compute and DMA scale with true nnz, the
+      right arm for skewed or magnitude-pruned topologies.
+  fused_mlp       — VMEM-resident multi-layer forward for square
+      ``stack_bsr`` stacks: one ``pallas_call`` for all L layers, no
+      inter-layer HBM activation traffic.
+"""
+
 from repro.kernels import ops, ref
 
 __all__ = ["ops", "ref"]

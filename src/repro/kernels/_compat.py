@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU API surface we use.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer jax releases; resolve whichever this installation provides once so
+every kernel file stays version-agnostic.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

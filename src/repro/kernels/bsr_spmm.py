@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 from repro.kernels.semiring_matmul import _VPU_SEMIRINGS, _vpu_tile_product
 from repro.sparse.bsr import BlockSparseMatrix
 
@@ -129,7 +131,7 @@ def bsr_spmm(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -1,0 +1,180 @@
+"""VMEM-resident multi-layer fused forward Pallas TPU kernel.
+
+``dnn_forward`` re-streams the (m, n) activation panel through HBM once
+per layer: L layers → L−1 needless round-trips. The GraphChallenge
+winners (arXiv:2004.01181, arXiv:1909.05631) fuse the whole layer stack;
+this kernel does the TPU equivalent for the paper's square deep MLP
+(homogeneous ``stack_bsr`` weight stacks):
+
+  ONE ``pallas_call``, grid = (n_tiles, L, nrb, max_blocks_per_row).
+
+Per output column stripe j, the full (m, block_n) activation panel lives
+in a double-buffered VMEM scratch: layer l reads panel ``l % 2`` and
+writes ``(l+1) % 2`` row-block by row-block, applying the per-layer
+``max(W·Y + b, 0)`` epilogue in-register. Only y0 is read from HBM and
+only Y[L] is written back.
+
+VMEM budget: 2·m·block_n f32 panels + the streamed-in y0/out blocks +
+one (bs_r, block_n) accumulator — callers check
+:func:`fused_mlp_vmem_bytes` before dispatching (``repro.core.dnn``
+falls back to the layered path when the panel would not fit).
+
+Weights use the ELL layout (the stack shares one static
+``max_blocks_per_row``); the occupancy-exact CSR grid and the resident
+panel are complementary optimisations — CSR wins on skewed single
+layers, residency wins on deep stacks — and dispatch picks per workload.
+
+plus_times only: the per-layer ReLU epilogue is the paper's max-plus
+step already fused in; other semirings take the layered path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compat
+
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+# Stay well inside the ~16 MiB/core VMEM so the streamed blocks and
+# double-buffering slack fit alongside the resident panels.
+VMEM_SOFT_LIMIT_BYTES = 12 * 1024 * 1024
+
+
+def fused_mlp_vmem_bytes(m: int, block_n: int = 128) -> int:
+    """Scratch bytes the resident panel needs (2 panels + in/out tiles)."""
+    panel = m * block_n * 4
+    return 4 * panel  # ybuf×2 + y0 stripe + out stripe
+
+
+def fused_mlp_eligible(w: BlockSparseMatrix, block_n: int = 128) -> bool:
+    """Square stack small enough for the panel to live in VMEM."""
+    m, k = w.shape
+    return m == k and fused_mlp_vmem_bytes(m, block_n) <= VMEM_SOFT_LIMIT_BYTES
+
+
+def _kernel(
+    col_idx_ref,  # scalar-prefetch (L, nrb, mbpr) int32
+    mask_ref,  # scalar-prefetch (L, nrb, mbpr) int32
+    blocks_ref,  # (1, 1, 1, bs_r, bs_c)
+    y0_ref,  # (m, bn) — this j-stripe of the input panel
+    bias_ref,  # (1, bs_r, 1)
+    o_ref,  # (m, bn) — this j-stripe of Y[L]
+    ybuf_ref,  # VMEM scratch (2, m, bn) f32 double-buffered panel
+    acc_ref,  # VMEM scratch (bs_r, bn) f32
+    *,
+    n_layers: int,
+    t_steps: int,
+    bs_r: int,
+    bs_c: int,
+):
+    l = pl.program_id(1)
+    i = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when((l == 0) & (i == 0) & (t == 0))
+    def _load_input_panel():
+        ybuf_ref[0] = y0_ref[...].astype(jnp.float32)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[l, i, t] != 0)
+    def _accumulate():
+        w = blocks_ref[0, 0, 0].astype(jnp.float32)
+        c = col_idx_ref[l, i, t]
+        y = ybuf_ref[l % 2, pl.ds(c * bs_c, bs_c), :]
+        acc_ref[...] += jnp.dot(w, y, preferred_element_type=jnp.float32)
+
+    @pl.when(t == t_steps - 1)
+    def _close_row_block():
+        # The paper's eWiseMult(+bias) / eWiseAdd(max 0) pair, in-register.
+        val = jnp.maximum(acc_ref[...] + bias_ref[0].astype(jnp.float32), 0.0)
+        ybuf_ref[(l + 1) % 2, pl.ds(i * bs_r, bs_r), :] = val
+
+        @pl.when(l == n_layers - 1)
+        def _store_output():
+            o_ref[pl.ds(i * bs_r, bs_r), :] = val.astype(o_ref.dtype)
+
+
+def fused_mlp_forward(
+    stacked_w: BlockSparseMatrix,
+    stacked_b: Array,
+    y0: Array,
+    *,
+    block_n: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> Array:
+    """Y[L] (m, n) = relu-MLP(y0) through all L layers in one kernel.
+
+    ``stacked_w.blocks``: (L, nrb, mbpr, bs_r, bs_c) — a ``stack_bsr``
+    result; ``stacked_b``: (L, m). Requires square layers (m == k) and
+    ``n % block_n == 0``.
+    """
+    m, k = stacked_w.shape
+    if m != k:
+        raise ValueError(f"fused MLP needs square layers, got {stacked_w.shape}")
+    if stacked_w.blocks.ndim != 5:
+        raise ValueError("stacked_w must carry a leading L axis (stack_bsr)")
+    n_layers, nrb, mbpr = stacked_w.col_idx.shape
+    bs_r, bs_c = stacked_w.block_shape
+    n = y0.shape[1]
+    assert y0.shape[0] == k, (stacked_w.shape, y0.shape)
+    assert n % block_n == 0, (n, block_n)
+    assert stacked_b.shape == (n_layers, m), stacked_b.shape
+    out_dtype = out_dtype or jnp.result_type(stacked_w.dtype, y0.dtype)
+
+    kernel = functools.partial(
+        _kernel,
+        n_layers=n_layers,
+        t_steps=mbpr,
+        bs_r=bs_r,
+        bs_c=bs_c,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n // block_n, n_layers, nrb, mbpr),
+        in_specs=[
+            # stored block (l, i, t)
+            pl.BlockSpec(
+                (1, 1, 1, bs_r, bs_c),
+                lambda j, l, i, t, ci, mk: (l, i, t, 0, 0),
+            ),
+            # the full input column stripe for this j
+            pl.BlockSpec((m, block_n), lambda j, l, i, t, ci, mk: (0, j)),
+            # bias row-tile of layer l, row-block i
+            pl.BlockSpec(
+                (1, bs_r, 1), lambda j, l, i, t, ci, mk: (l, i, 0)
+            ),
+        ],
+        # the full output column stripe — written once per j, on layer L-1
+        out_specs=pl.BlockSpec((m, block_n), lambda j, l, i, t, ci, mk: (0, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, m, block_n), jnp.float32),
+            pltpu.VMEM((bs_r, block_n), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(
+        stacked_w.col_idx,
+        stacked_w.block_mask.astype(jnp.int32),
+        stacked_w.blocks,
+        y0,
+        stacked_b[:, :, None],
+    )

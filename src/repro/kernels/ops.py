@@ -1,5 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
+One wrapper per kernel: ``semiring_matmul`` (dense), ``bsr_spmm``
+(ELL grid), ``bcsr_spmm`` (occupancy-exact CSR grid — also fills the
+empty block-rows the kernel grid never visits), ``fused_mlp_forward``
+(VMEM-resident multi-layer, single pallas_call). See the package
+docstring for when dispatch picks which.
+
 On TPU the kernels run compiled; everywhere else (this container is
 CPU-only) they run in ``interpret=True`` mode, which executes the kernel
 body in Python/XLA-CPU for correctness validation. ``auto_interpret()``
@@ -16,8 +22,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bcsr_spmm as _bcsr
 from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import fused_mlp as _fmlp
 from repro.kernels import semiring_matmul as _smm
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
@@ -26,6 +35,14 @@ Array = jax.Array
 @functools.cache
 def auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _semiring_zero(semiring_name: str) -> float:
+    """The ⊕-identity used for k-padding and empty-row fills — must match
+    the kernels' accumulator init."""
+    if semiring_name == "plus_times":
+        return 0.0
+    return _smm._VPU_SEMIRINGS[semiring_name][2]
 
 
 def _pad_to(x: Array, axis: int, mult: int, fill: float = 0.0) -> Array:
@@ -68,9 +85,7 @@ def semiring_matmul(
     block_m = min(block_m, _ceil_mult(m))
     block_n = min(block_n, _ceil_mult(n))
     block_k = min(block_k, _ceil_mult(k))
-    sr_zero = 0.0 if semiring_name == "plus_times" else (
-        _smm._VPU_SEMIRINGS[semiring_name][2]
-    )
+    sr_zero = _semiring_zero(semiring_name)
     ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k, fill=sr_zero)
     bp = _pad_to(_pad_to(b, 0, block_k, fill=sr_zero), 1, block_n)
     # NOTE: for plus_times zero-padding is exact. For max/min semirings the
@@ -128,5 +143,75 @@ def bsr_spmm(
         fuse_bias_relu=fuse_bias_relu,
         block_n=block_n,
         interpret=interpret,
+    )
+    return out[:, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("semiring_name", "fuse_bias_relu", "block_n", "interpret"),
+)
+def bcsr_spmm(
+    a: BlockCSRMatrix,
+    b: Array,
+    bias: Array | None = None,
+    *,
+    semiring_name: str = "plus_times",
+    fuse_bias_relu: bool = False,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """Padded, jit'd occupancy-exact block-CSR ``C = A ⊕.⊗ B``.
+
+    Grid steps ∝ stored nnz blocks (vs ``nrb × max_blocks_per_row`` for
+    the ELL kernel). Block-rows with no stored blocks are filled with the
+    epilogue of the semiring zero here (the kernel never visits them).
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    n = b.shape[1]
+    block_n = min(block_n, _ceil_mult(n))
+    bp = _pad_to(b, 1, block_n)
+    out = _bcsr.bcsr_spmm(
+        a,
+        bp,
+        semiring_name=semiring_name,
+        bias=bias,
+        fuse_bias_relu=fuse_bias_relu,
+        block_n=block_n,
+        interpret=interpret,
+    )[:, :n]
+    # Empty block-rows: kernel grid never maps them — splice in the
+    # epilogue of the accumulator init (semiring zero).
+    fill = jnp.full((a.shape[0],), _semiring_zero(semiring_name), out.dtype)
+    if fuse_bias_relu:
+        fill = jnp.maximum(fill + bias.astype(out.dtype), 0).astype(out.dtype)
+    counts = a.row_ptr[1:] - a.row_ptr[:-1]
+    row_empty = jnp.repeat(
+        counts == 0, a.block_shape[0], total_repeat_length=a.shape[0]
+    )
+    return jnp.where(row_empty[:, None], fill[:, None], out)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_mlp_forward(
+    stacked_w: BlockSparseMatrix,
+    stacked_b: Array,
+    y0: Array,
+    *,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """Padded, jit'd VMEM-resident L-layer forward — ONE pallas_call.
+
+    ``stacked_w``: BlockSparseMatrix whose leaves carry a leading L axis
+    (see ``repro.core.dnn.stack_bsr``); square layers only. The
+    activation panel never round-trips to HBM between layers.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    n = y0.shape[1]
+    block_n = min(block_n, _ceil_mult(n))
+    yp = _pad_to(y0, 1, block_n)
+    out = _fmlp.fused_mlp_forward(
+        stacked_w, stacked_b, yp, block_n=block_n, interpret=interpret
     )
     return out[:, :n]

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.core.semiring import get_semiring
 from repro.sparse import ops as sparse_ops
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
@@ -40,3 +41,42 @@ def bsr_spmm_ref(
     if fuse_bias_relu:
         out = jnp.maximum(out + bias.astype(jnp.float32)[:, None], 0.0)
     return out
+
+
+def bcsr_spmm_ref(
+    a: BlockCSRMatrix,
+    b: Array,
+    *,
+    semiring_name: str = "plus_times",
+    bias: Array | None = None,
+    fuse_bias_relu: bool = False,
+) -> Array:
+    sr = get_semiring(semiring_name)
+    out = sparse_ops.bcsr_matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32), sr
+    )
+    if fuse_bias_relu:
+        out = jnp.maximum(out + bias.astype(jnp.float32)[:, None], 0.0)
+    return out
+
+
+def fused_mlp_forward_ref(
+    stacked_w: BlockSparseMatrix,
+    stacked_b: Array,
+    y0: Array,
+) -> Array:
+    """Layer-by-layer reference for the VMEM-resident fused forward."""
+    n_layers = stacked_b.shape[0]
+    y = y0.astype(jnp.float32)
+    for l in range(n_layers):
+        w_l = BlockSparseMatrix(
+            stacked_w.blocks[l].astype(jnp.float32),
+            stacked_w.col_idx[l],
+            stacked_w.block_mask[l],
+            stacked_w.shape,
+            stacked_w.block_shape,
+        )
+        y = sparse_ops.bsr_matmul_fused_relu(
+            w_l, y, stacked_b[l].astype(jnp.float32)
+        )
+    return y

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.sparse import ops as sparse_ops
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
@@ -38,16 +39,23 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
 
 
 def linear(w, x: Array, bias: Array | None = None) -> Array:
-    """y = x @ W (+ b). ``w`` is dense (d_in, d_out) or BSR (d_out, d_in).
+    """y = x @ W (+ b). ``w`` is dense (d_in, d_out) or sparse
+    (d_out, d_in) — ELL-padded BSR for regular topologies, block-CSR for
+    skewed/pruned ones (see ``repro.core.dnn.preferred_layout``).
 
-    BSR stores the *output-major* layout (as the paper's W matrices are
-    applied ``W @ Y``), so sparse weights compute ``(W @ x^T)^T`` through
-    the block-sparse path.
+    Sparse weights store the *output-major* layout (as the paper's W
+    matrices are applied ``W @ Y``), so they compute ``(W @ x^T)^T``
+    through the block-sparse path.
     """
-    if isinstance(w, BlockSparseMatrix):
+    if isinstance(w, (BlockSparseMatrix, BlockCSRMatrix)):
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T  # (d_in, tokens)
-        out = sparse_ops.bsr_matmul(w, xt)  # (d_out, tokens)
+        matmul = (
+            sparse_ops.bcsr_matmul
+            if isinstance(w, BlockCSRMatrix)
+            else sparse_ops.bsr_matmul
+        )
+        out = matmul(w, xt)  # (d_out, tokens)
         y = out.T.reshape(*lead, w.shape[0])
     else:
         y = jnp.einsum("...i,io->...o", x, w)
@@ -112,7 +120,7 @@ def sparsify_ffn(
 
     out = {}
     for name, w in p.items():
-        if isinstance(w, BlockSparseMatrix) or w.ndim != 2:
+        if isinstance(w, (BlockSparseMatrix, BlockCSRMatrix)) or w.ndim != 2:
             out[name] = w
             continue
         # prune in output-major orientation (W @ x convention of the paper)

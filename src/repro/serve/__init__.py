@@ -1,1 +1,5 @@
-from repro.serve.engine import Engine, cache_nbytes  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    Engine,
+    SparseDNNEngine,
+    cache_nbytes,
+)

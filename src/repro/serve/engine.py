@@ -1,21 +1,31 @@
-"""Batched serving engine: prefill + decode loop with sampling.
+"""Batched serving engines.
 
-The engine owns the decode cache (GQA KV / MLA latent / SSM state — built
-by ``Model.init_cache`` per the arch's mixer kinds) and drives jit'd
-``prefill`` / ``decode_step`` functions. Requests are served in aligned
-batches (continuous batching is a scheduler concern above this layer; the
+``Engine`` — LLM prefill + decode loop with sampling. Owns the decode
+cache (GQA KV / MLA latent / SSM state — built by ``Model.init_cache``
+per the arch's mixer kinds) and drives jit'd ``prefill`` /
+``decode_step`` functions. Requests are served in aligned batches
+(continuous batching is a scheduler concern above this layer; the
 dry-run cells ``decode_32k``/``long_500k`` lower exactly the
 ``decode_step`` this engine calls in its loop).
+
+``SparseDNNEngine`` — the paper's workload as a service: batched forward
+passes through a deep sparse ReLU MLP (GraphChallenge-style inference).
+Requests are feature columns; the engine right-pads each batch to the
+kernel tile, dispatches the VMEM-resident single-``pallas_call`` forward
+when the stack qualifies (square, homogeneous, panel fits VMEM) and the
+layered fused path otherwise, and reports per-batch kernel-step
+accounting so operators can see the nnz-proportional scaling live.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import dnn
 from repro.models.model import Model
 
 Array = jax.Array
@@ -73,6 +83,93 @@ class Engine:
             "cache_bytes": cache_nbytes(cache),
         }
         return tokens, stats
+
+
+@dataclasses.dataclass
+class SparseDNNEngine:
+    """Serve batched inference through the paper's deep sparse MLP.
+
+    ``weights``/``biases``: the L-layer stack (dense, BSR, or block-CSR
+    per layer — ``repro.core.dnn`` dispatch rules apply). ``infer``
+    accepts (m, batch) activation panels of any batch size; batches are
+    padded to ``batch_align`` so the jit cache stays warm across request
+    sizes.
+    """
+
+    weights: Sequence[dnn.Weight]
+    biases: Sequence[Array]
+    batch_align: int = 64
+    use_resident: bool | None = None  # None = auto-detect eligibility
+
+    def __post_init__(self):
+        self.n_layers = len(self.weights)
+        if len(self.biases) != self.n_layers:
+            raise ValueError("weights/biases length mismatch")
+        resident_ok = dnn.resident_eligible(self.weights)
+        if self.use_resident and not resident_ok:
+            raise ValueError(
+                "use_resident=True but the stack is not eligible for the "
+                "VMEM-resident kernel (needs a homogeneous square BSR "
+                "stack whose activation panel fits VMEM); pass "
+                "use_resident=None to auto-detect"
+            )
+        self._resident = (
+            resident_ok if self.use_resident is None else self.use_resident
+        )
+        if self._resident:
+            # Stack once — weights are immutable across requests; the
+            # hot path must not rebuild the L-layer stack per infer().
+            self._stacked_w = dnn.stack_bsr(list(self.weights))
+            self._stacked_b = jnp.stack(list(self.biases))
+        self._served = 0
+
+    def _layered_kernel_forward(self, y: Array) -> Array:
+        """Fallback: one fused kernel call per layer, dispatched on the
+        layer's weight layout (the real kernel path, not the jnp oracle)."""
+        from repro.kernels import ops as kernel_ops
+        from repro.sparse.bcsr import BlockCSRMatrix
+        from repro.sparse.bsr import BlockSparseMatrix
+
+        for w, b in zip(self.weights, self.biases):
+            if isinstance(w, BlockCSRMatrix):
+                y = kernel_ops.bcsr_spmm(w, y, b, fuse_bias_relu=True)
+            elif isinstance(w, BlockSparseMatrix):
+                y = kernel_ops.bsr_spmm(w, y, b, fuse_bias_relu=True)
+            else:
+                y = kernel_ops.semiring_matmul(w, y, b, fuse_bias_relu=True)
+        return y
+
+    def infer(self, y0: Array) -> tuple[Array, dict]:
+        """y0: (m, batch) feature columns → (Y[L], stats)."""
+        m, batch = y0.shape
+        pallas_calls = 1 if self._resident else self.n_layers
+        if batch == 0:
+            return y0, {
+                "batch": 0,
+                "padded_batch": 0,
+                "resident": self._resident,
+                "pallas_calls": 0,
+                "served_total": self._served,
+            }
+        pad = (-batch) % self.batch_align
+        yp = jnp.pad(y0, ((0, 0), (0, pad))) if pad else y0
+        if self._resident:
+            from repro.kernels import ops as kernel_ops
+
+            out = kernel_ops.fused_mlp_forward(
+                self._stacked_w, self._stacked_b, yp
+            )
+        else:
+            out = self._layered_kernel_forward(yp)
+        self._served += batch
+        stats = {
+            "batch": batch,
+            "padded_batch": batch + pad,
+            "resident": self._resident,
+            "pallas_calls": pallas_calls,
+            "served_total": self._served,
+        }
+        return out[:, :batch], stats
 
 
 def make_serve_fns(model: Model):

@@ -1,4 +1,5 @@
 from repro.sparse.bsr import BlockSparseMatrix
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse import ops
 
-__all__ = ["BlockSparseMatrix", "ops"]
+__all__ = ["BlockSparseMatrix", "BlockCSRMatrix", "ops"]

@@ -1,0 +1,313 @@
+"""Block-CSR weight matrices — the occupancy-exact sparse layout.
+
+The ELL-padded :class:`~repro.sparse.bsr.BlockSparseMatrix` pays the
+*worst-case* row occupancy on every row: its kernel grid is
+``nrb × max_blocks_per_row`` and padded slots still burn grid steps and
+HBM→VMEM DMAs (their compute is skipped, their latency is not). This
+module stores the same topology in flattened CSR order so work scales
+with the *true* number of stored blocks — the paper's core claim
+(arXiv:1708.02937 §V: inference time ∝ nnz) carried through to the
+kernel grid.
+
+Layout (all leading dimensions = ``total_blocks``):
+
+  values:  (total_blocks, bs_r, bs_c)  stored blocks, row-major by
+           block-row, columns ascending within a row.
+  row_id:  (total_blocks,) int32       block-row of each stored block —
+           the kernel's scalar-prefetched flush map.
+  col_idx: (total_blocks,) int32       block-column of each stored block.
+  valid:   (total_blocks,) bool        False only for the optional
+           tail padding (shape-stable sweeps); padded slots carry
+           ``row_id`` of the last real block so they never trigger a
+           spurious row-change flush.
+  row_ptr: (n_row_blocks + 1,) int32   classic CSR offsets over *valid*
+           blocks (used for empty-row detection and analysis).
+
+When to use which layout (see also ``repro.kernels``):
+  * ELL/BSR — regular topologies (uniform blocks/row, e.g. the paper's
+    fixed-degree synthetic networks). Simplest grid, no flush logic.
+  * block-CSR — skewed or pruned topologies where max row occupancy ≫
+    mean: the ELL pad multiplies the whole grid by the worst row while
+    the CSR grid pays exactly ``total_nnz_blocks`` steps.
+``repro.core.dnn.preferred_layout`` encodes this choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockCSRMatrix:
+    """Flattened block-CSR matrix of logical shape ``shape``.
+
+    Construction is host-side (topology discovery needs concrete
+    values), like ``BlockSparseMatrix.from_dense``; the result is a
+    pytree usable under jit.
+    """
+
+    values: Array  # (T, bs_r, bs_c)
+    row_ptr: Array  # (nrb + 1,) int32 over valid blocks
+    row_id: Array  # (T,) int32
+    col_idx: Array  # (T,) int32
+    valid: Array  # (T,) bool
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+    # --- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (
+            (self.values, self.row_ptr, self.row_id, self.col_idx, self.valid),
+            (self.shape, self.block_shape),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, row_ptr, row_id, col_idx, valid = children
+        shape, block_shape = aux
+        return cls(values, row_ptr, row_id, col_idx, valid, shape, block_shape)
+
+    # --- derived structure ----------------------------------------------
+    @property
+    def n_row_blocks(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def n_col_blocks(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    @property
+    def total_blocks(self) -> int:
+        """Stored blocks including tail padding — the kernel's grid extent."""
+        return self.values.shape[0]
+
+    @property
+    def nnz_blocks(self) -> Array:
+        return jnp.sum(self.valid)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            self.values.size * self.values.dtype.itemsize
+            + self.row_ptr.size * self.row_ptr.dtype.itemsize
+            + self.row_id.size * self.row_id.dtype.itemsize
+            + self.col_idx.size * self.col_idx.dtype.itemsize
+            + self.valid.size  # bool = 1 byte
+        )
+
+    def astype(self, dtype) -> "BlockCSRMatrix":
+        return BlockCSRMatrix(
+            self.values.astype(dtype),
+            self.row_ptr,
+            self.row_id,
+            self.col_idx,
+            self.valid,
+            self.shape,
+            self.block_shape,
+        )
+
+    # --- conversions ------------------------------------------------------
+    @classmethod
+    def from_bsr(
+        cls, a: BlockSparseMatrix, *, pad_to: int | None = None
+    ) -> "BlockCSRMatrix":
+        """Flatten an ELL-padded BSR matrix to CSR order (host-side).
+
+        ``pad_to`` forces ``total_blocks`` (shape-stable sweeps); padded
+        tail slots are invalid zero blocks.
+        """
+        mask = np.asarray(a.block_mask)
+        col_idx = np.asarray(a.col_idx)
+        blocks = np.asarray(a.blocks)
+        nrb, mbpr = mask.shape
+        bs_r, bs_c = a.block_shape
+
+        rows, slots = np.nonzero(mask)  # row-major → CSR order; cols
+        # ascending within a row because construction stores them sorted.
+        nnz = len(rows)
+        total = int(pad_to) if pad_to is not None else max(nnz, 1)
+        if nnz > total:
+            raise ValueError(f"pad_to={pad_to} < nnz blocks {nnz}")
+
+        values = np.zeros((total, bs_r, bs_c), blocks.dtype)
+        row_id = np.zeros((total,), np.int32)
+        cols = np.zeros((total,), np.int32)
+        valid = np.zeros((total,), bool)
+        values[:nnz] = blocks[rows, slots]
+        row_id[:nnz] = rows
+        cols[:nnz] = col_idx[rows, slots]
+        valid[:nnz] = True
+        # Tail padding rides on the last real row so the kernel's
+        # row-change flush logic never fires on an invalid slot.
+        row_id[nnz:] = rows[-1] if nnz else 0
+
+        counts = mask.sum(axis=1).astype(np.int64)
+        row_ptr = np.zeros((nrb + 1,), np.int32)
+        np.cumsum(counts, out=row_ptr[1:])
+        return cls(
+            jnp.asarray(values),
+            jnp.asarray(row_ptr),
+            jnp.asarray(row_id),
+            jnp.asarray(cols),
+            jnp.asarray(valid),
+            a.shape,
+            a.block_shape,
+        )
+
+    @classmethod
+    def from_dense(
+        cls,
+        dense: Array,
+        block_shape: Tuple[int, int],
+        *,
+        pad_to: int | None = None,
+    ) -> "BlockCSRMatrix":
+        return cls.from_bsr(
+            BlockSparseMatrix.from_dense(dense, block_shape), pad_to=pad_to
+        )
+
+    @classmethod
+    def random_skewed(
+        cls,
+        seed: int,
+        shape: Tuple[int, int],
+        block_shape: Tuple[int, int],
+        total_blocks: int,
+        *,
+        skew: float = 0.0,
+        dtype=np.float32,
+    ) -> "BlockCSRMatrix":
+        """Random topology with ``total_blocks`` stored blocks distributed
+        over rows with controllable skew (host-side; benchmark helper).
+
+        ``skew`` ∈ [0, 1): 0 spreads blocks uniformly; approaching 1
+        concentrates them on the first rows (Zipf-like) — the regime
+        where the ELL pad is maximally wasteful. Values ~ U[-1, 3)
+        (paper §V-B).
+        """
+        m, n = shape
+        bs_r, bs_c = block_shape
+        nrb, ncb = m // bs_r, n // bs_c
+        if total_blocks > nrb * ncb:
+            raise ValueError("total_blocks exceeds capacity")
+        rng = np.random.default_rng(seed)
+        # Zipf-ish row weights: w_i ∝ (i+1)^(-s) with s mapped from skew.
+        s = 4.0 * skew
+        w = (np.arange(nrb) + 1.0) ** (-s)
+        w /= w.sum()
+        counts = rng.multinomial(total_blocks, w)
+        counts = np.minimum(counts, ncb)
+        # Redistribute overflow to rows with spare capacity.
+        deficit = total_blocks - counts.sum()
+        while deficit > 0:
+            spare = np.nonzero(counts < ncb)[0]
+            take = spare[: int(deficit)]
+            counts[take] += 1
+            deficit = total_blocks - counts.sum()
+
+        dense = np.zeros((m, n), dtype)
+        for i in range(nrb):
+            cols = rng.choice(ncb, size=int(counts[i]), replace=False)
+            for c in np.sort(cols):
+                blk = rng.uniform(-1.0, 3.0, (bs_r, bs_c)).astype(dtype)
+                # keep the block nonzero so from_dense keeps it
+                blk[0, 0] = blk[0, 0] if blk[0, 0] != 0 else 1.0
+                dense[i * bs_r : (i + 1) * bs_r, c * bs_c : (c + 1) * bs_c] = blk
+        return cls.from_dense(jnp.asarray(dense), block_shape, pad_to=total_blocks)
+
+    def to_bsr(self, *, pad_to: int | None = None) -> BlockSparseMatrix:
+        """Re-widen to the ELL layout (host-side)."""
+        row_ptr = np.asarray(self.row_ptr)
+        counts = row_ptr[1:] - row_ptr[:-1]
+        nrb = self.n_row_blocks
+        bs_r, bs_c = self.block_shape
+        mbpr = int(pad_to if pad_to is not None else max(int(counts.max()), 1))
+        if counts.max() > mbpr:
+            raise ValueError(f"pad_to={pad_to} < max row occupancy")
+        blocks = np.zeros((nrb, mbpr, bs_r, bs_c), np.asarray(self.values).dtype)
+        col_idx = np.zeros((nrb, mbpr), np.int32)
+        mask = np.zeros((nrb, mbpr), bool)
+        vals = np.asarray(self.values)
+        cols = np.asarray(self.col_idx)
+        for i in range(nrb):
+            lo, hi = int(row_ptr[i]), int(row_ptr[i + 1])
+            blocks[i, : hi - lo] = vals[lo:hi]
+            col_idx[i, : hi - lo] = cols[lo:hi]
+            mask[i, : hi - lo] = True
+        return BlockSparseMatrix(
+            jnp.asarray(blocks),
+            jnp.asarray(col_idx),
+            jnp.asarray(mask),
+            self.shape,
+            self.block_shape,
+        )
+
+    def transpose(self) -> "BlockCSRMatrix":
+        """Device-side, fully jittable transpose: re-sort the stored
+        blocks into the transposed CSR order (``total_blocks`` is static,
+        so — unlike the ELL layout — no output pad width is needed).
+
+        Invalid tail slots sort to the end (they keep their inert role);
+        their ``row_id`` is pinned to the last valid block's row so the
+        kernels' flush logic stays sound.
+        """
+        ncb = self.n_col_blocks
+        total = self.total_blocks
+        # Stable sort by (valid first, new row = old col); stability keeps
+        # old rows (= new cols) ascending within each new row.
+        order = jnp.argsort(
+            jnp.where(self.valid, self.col_idx, ncb), stable=True
+        )
+        new_row = self.col_idx[order]
+        new_col = self.row_id[order]
+        new_valid = self.valid[order]
+        values_t = jnp.swapaxes(self.values[order], -1, -2)
+
+        counts = (
+            jnp.zeros((ncb,), jnp.int32)
+            .at[self.col_idx]
+            .add(self.valid.astype(jnp.int32))
+        )
+        row_ptr = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)]
+        )
+        # Pin padding row_id to the last valid block's new row (see class
+        # docstring); nnz is dynamic, so gather it from row_ptr's tail.
+        nnz = row_ptr[-1]
+        last_row = new_row[jnp.maximum(nnz - 1, 0)]
+        new_row = jnp.where(new_valid, new_row, last_row)
+        new_col = jnp.where(new_valid, new_col, 0)
+        return BlockCSRMatrix(
+            jnp.where(new_valid[:, None, None], values_t, 0),
+            row_ptr,
+            new_row,
+            new_col,
+            new_valid,
+            (self.shape[1], self.shape[0]),
+            (self.block_shape[1], self.block_shape[0]),
+        )
+
+    def to_dense(self) -> Array:
+        m, n = self.shape
+        bs_r, bs_c = self.block_shape
+        nrb, ncb = self.n_row_blocks, self.n_col_blocks
+        safe = jnp.where(self.valid[:, None, None], self.values, 0)
+        tiles = jnp.zeros((nrb, ncb, bs_r, bs_c), self.dtype)
+        # invalid slots scatter to their (row_id, col_idx) with zero data —
+        # harmless (construction never aliases a real (row, col) twice).
+        tiles = tiles.at[self.row_id, self.col_idx].add(safe)
+        return tiles.transpose(0, 2, 1, 3).reshape(m, n)

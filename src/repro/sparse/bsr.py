@@ -11,6 +11,11 @@ Padding discipline: padded slots carry ``col_idx = 0``, ``block = 0`` and
 ``block_mask = False``. Under the arithmetic semiring the zero block is
 self-neutralising; for general semirings consumers must honour
 ``block_mask`` (``repro.sparse.ops`` does).
+
+The ELL pad prices every block-row at the WORST row's occupancy — fine
+for regular topologies, wasteful for skewed/pruned ones. For those, use
+the occupancy-exact :mod:`repro.sparse.bcsr` layout; the choice rule
+lives in ``repro.core.dnn.preferred_layout``.
 """
 
 from __future__ import annotations
@@ -204,9 +209,88 @@ class BlockSparseMatrix:
         tiles = tiles.at[rows, self.col_idx].add(safe_blocks)
         return tiles.transpose(0, 2, 1, 3).reshape(self.shape)
 
-    def transpose(self) -> "BlockSparseMatrix":
-        """Oracle-grade transpose (host-side rebuild)."""
-        return BlockSparseMatrix.from_dense(
-            np.asarray(self.to_dense()).T,
-            (self.block_shape[1], self.block_shape[0]),
+    def transpose(self, *, pad_to: int | None = None) -> "BlockSparseMatrix":
+        """Device-side transpose: regroup stored blocks by column, no
+        densification (the old path materialised the full (m, n) dense
+        matrix — O(m·n) memory — and was host-only).
+
+        Stored topology is preserved exactly (including explicit zero
+        blocks). Jittable when ``pad_to`` (the transposed
+        ``max_blocks_per_row``, i.e. the max *column* occupancy of
+        ``self``) is given; with ``pad_to=None`` the width is read off
+        the mask, which syncs one small scalar to host. ``pad_to``
+        smaller than the true max column occupancy raises outside jit
+        and silently drops blocks inside jit — pass a safe bound (e.g.
+        ``n_row_blocks``) when unsure.
+        """
+        nrb, mbpr = self.col_idx.shape
+        ncb = self.n_col_blocks
+        bs_r, bs_c = self.block_shape
+        flat = nrb * mbpr
+
+        flat_cols = self.col_idx.reshape(flat)
+        flat_valid = self.block_mask.reshape(flat)
+        flat_rows = jnp.repeat(
+            jnp.arange(nrb, dtype=jnp.int32), mbpr, total_repeat_length=flat
+        )
+        valid_i32 = flat_valid.astype(jnp.int32)
+        counts = (
+            jnp.zeros((ncb,), jnp.int32).at[flat_cols].add(valid_i32)
+        )
+        if pad_to is None:
+            out_mbpr = max(int(jax.device_get(counts.max())), 1)
+        else:
+            out_mbpr = int(pad_to)
+            if not isinstance(counts, jax.core.Tracer):
+                max_occ = int(jax.device_get(counts.max()))
+                if max_occ > out_mbpr:
+                    raise ValueError(
+                        f"pad_to={pad_to} < max column occupancy {max_occ}"
+                    )
+
+        # Stable sort by (valid first, column): valid blocks land grouped
+        # by output row-block, original row-major order (→ ascending new
+        # col_idx) preserved inside each group.
+        order = jnp.argsort(
+            jnp.where(flat_valid, flat_cols, ncb), stable=True
+        )
+        s_cols = flat_cols[order]
+        s_valid = flat_valid[order]
+        s_rows = flat_rows[order]
+        group_start = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts, dtype=jnp.int32)]
+        )
+        pos = (
+            jnp.arange(flat, dtype=jnp.int32)
+            - group_start[jnp.where(s_valid, s_cols, 0)]
+        )
+        # invalid slots (and pad_to overflow under jit) scatter out of
+        # range and are dropped
+        pos = jnp.where(s_valid, pos, out_mbpr)
+        s_blocks = jnp.swapaxes(
+            self.blocks.reshape(flat, bs_r, bs_c)[order], -1, -2
+        )
+
+        dest_col = jnp.where(s_valid, s_cols, 0)
+        blocks_t = (
+            jnp.zeros((ncb, out_mbpr, bs_c, bs_r), self.dtype)
+            .at[dest_col, pos]
+            .set(s_blocks, mode="drop")
+        )
+        col_idx_t = (
+            jnp.zeros((ncb, out_mbpr), jnp.int32)
+            .at[dest_col, pos]
+            .set(s_rows, mode="drop")
+        )
+        mask_t = (
+            jnp.zeros((ncb, out_mbpr), bool)
+            .at[dest_col, pos]
+            .set(True, mode="drop")
+        )
+        return BlockSparseMatrix(
+            blocks_t,
+            col_idx_t,
+            mask_t,
+            (self.shape[1], self.shape[0]),
+            (bs_c, bs_r),
         )

@@ -1,11 +1,19 @@
-"""Pure-jnp BSR operations — the executable oracle + CPU path.
+"""Pure-jnp sparse operations — the executable oracles + CPU paths.
 
-``bsr_matmul`` is the generalized ``C = A ⊕.⊗ B`` for an ELL-padded BSR
-``A`` and dense ``B`` over any :class:`~repro.core.semiring.Semiring`.
-The Pallas TPU kernel (``repro.kernels.bsr_spmm``) is checked against this
-implementation; on CPU this *is* the production path (XLA fuses the
-gather + einsum well enough to show the paper's sparsity crossover — see
-benchmarks).
+Two layouts, two oracles:
+
+* ``bsr_matmul`` — generalized ``C = A ⊕.⊗ B`` for an ELL-padded BSR
+  ``A`` (regular topologies) and dense ``B`` over any
+  :class:`~repro.core.semiring.Semiring`. Checks
+  ``repro.kernels.bsr_spmm``.
+* ``bcsr_matmul`` — the same contraction for the occupancy-exact
+  :class:`~repro.sparse.bcsr.BlockCSRMatrix` layout (skewed/pruned
+  topologies): per-stored-block products followed by a segment-⊕ over
+  the CSR row map, so host compute also scales with true nnz. Checks
+  ``repro.kernels.bcsr_spmm``.
+
+On CPU these *are* the production paths (XLA fuses the gather + einsum
+well enough to show the paper's sparsity crossover — see benchmarks).
 """
 
 from __future__ import annotations
@@ -14,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.semiring import PLUS_TIMES, Semiring
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
@@ -68,6 +77,90 @@ def bsr_matmul(
     prod = jnp.where(a.block_mask[:, :, None, None], prod, zero)
     out = semiring.add_reduce(prod, axis=1)  # (nrb, bs_r, k)
     return out.reshape(m, k)
+
+
+def _segment_add_reduce(
+    semiring: Semiring, x: Array, segment_ids: Array, num_segments: int
+) -> Array:
+    """⊕-reduce ``x`` over leading-axis segments (sorted CSR row ids)."""
+    kwargs = dict(
+        num_segments=num_segments, indices_are_sorted=True
+    )
+    if semiring.add is jnp.add:
+        return jax.ops.segment_sum(x, segment_ids, **kwargs)
+    if semiring.add is jnp.maximum:
+        return jax.ops.segment_max(x, segment_ids, **kwargs)
+    if semiring.add is jnp.minimum:
+        return jax.ops.segment_min(x, segment_ids, **kwargs)
+    # Generic ⊕ (log_plus, lor_land, xor_and, …): mask-broadcast reduce.
+    # O(num_segments × T) memory — fine for the oracle/CPU role these
+    # exotic semirings play; the hot semirings take the paths above.
+    hit = segment_ids[None, :] == jnp.arange(num_segments)[:, None]  # (R, T)
+    zero = jnp.asarray(semiring.zero, x.dtype)
+    expanded = jnp.where(hit[:, :, None, None], x[None], zero)
+    return semiring.add_reduce(expanded, axis=1)
+
+
+def bcsr_matmul(
+    a: BlockCSRMatrix,
+    b: Array,
+    semiring: Semiring = PLUS_TIMES,
+) -> Array:
+    """C (m, k) = A (m, n) ⊕.⊗ B (n, k) for the flattened CSR layout.
+
+    One generalized block product per *stored* block, then a segment-⊕
+    keyed by ``row_id``. Rows with no stored blocks come out as the
+    segment identity — the semiring zero, matching ``bsr_matmul``'s
+    masked semantics.
+    """
+    m, n = a.shape
+    if b.shape[0] != n:
+        raise ValueError(f"shape mismatch: A {a.shape} @ B {b.shape}")
+    k = b.shape[1]
+    bs_r, bs_c = a.block_shape
+    nrb = a.n_row_blocks
+
+    b_panels = b.reshape(n // bs_c, bs_c, k)
+    gathered = b_panels[a.col_idx]  # (T, bs_c, k)
+
+    if semiring.name == "plus_times":
+        safe = jnp.where(a.valid[:, None, None], a.values, 0)
+        prod = jnp.einsum(
+            "tbc,tck->tbk",
+            safe,
+            gathered,
+            preferred_element_type=jnp.promote_types(a.dtype, b.dtype),
+        )  # (T, bs_r, k)
+        out = jax.ops.segment_sum(
+            prod, a.row_id, num_segments=nrb, indices_are_sorted=True
+        )
+        return out.reshape(m, k).astype(jnp.result_type(a.dtype, b.dtype))
+
+    # General semiring: ⊗ then ⊕ over the block's contraction axis, then
+    # neutralise invalid slots and segment-⊕ over the row map.
+    prod = semiring.mul(
+        a.values[:, :, :, None], gathered[:, None, :, :]
+    )  # (T, bs_r, bs_c, k)
+    prod = semiring.add_reduce(prod, axis=2)  # (T, bs_r, k)
+    zero = jnp.asarray(semiring.zero, prod.dtype)
+    prod = jnp.where(a.valid[:, None, None], prod, zero)
+    out = _segment_add_reduce(semiring, prod, a.row_id, nrb)
+    # segment_max/min use their own identity for empty segments; for the
+    # tropical semirings those identities coincide with semiring.zero
+    # (±inf), but clamp anyway in case a segment implementation differs.
+    empty = (a.row_ptr[1:] == a.row_ptr[:-1])[:, None, None]
+    out = jnp.where(empty, zero, out)
+    return out.reshape(m, k)
+
+
+def bcsr_matmul_fused_relu(
+    a: BlockCSRMatrix,
+    b: Array,
+    bias: Array,
+) -> Array:
+    """Fused max(A·B + bias, 0) for the CSR layout (cf. the ELL version)."""
+    out = bcsr_matmul(a, b, PLUS_TIMES)
+    return jnp.maximum(out + bias[:, None], 0.0)
 
 
 def bsr_matmul_fused_relu(

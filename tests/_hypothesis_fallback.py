@@ -1,0 +1,182 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite uses a small, fixed subset of the hypothesis API
+(``given``/``settings``, ``strategies.integers/floats/sampled_from/
+lists/data``, ``strategy.map`` and ``extra.numpy.arrays``). When the real
+library is available it is always preferred (see ``conftest.py``); this
+module only exists so the property tests still *run* — with seeded
+pseudo-random example draws instead of hypothesis' guided search — in
+environments where ``pip install hypothesis`` is not possible.
+
+Differences from real hypothesis (intentional, documented):
+  * examples are drawn from a PRNG seeded by the test name — fully
+    deterministic across runs, no shrinking, no example database;
+  * ``max_examples`` is honoured, every other ``settings`` knob is a
+    no-op;
+  * failures report the drawn arguments in the assertion chain (the
+    wrapped call re-raises with the draw appended) rather than a
+    minimised counterexample.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A draw recipe: ``sample(rng)`` produces one example."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._sample(rng)))
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    def _draw(rng):
+        # Bias toward the endpoints — the classic property-test edge cases.
+        r = rng.random()
+        if r < 0.1:
+            return float(min_value)
+        if r < 0.2:
+            return float(max_value)
+        return float(rng.uniform(min_value, max_value))
+
+    return Strategy(_draw)
+
+
+def sampled_from(options) -> Strategy:
+    options = list(options)
+    return Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def _draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(size)]
+
+    return Strategy(_draw)
+
+
+class DataObject:
+    """Interactive draws inside the test body (``st.data()``)."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label: str | None = None):
+        return strategy.sample(self._rng)
+
+
+def data() -> Strategy:
+    return Strategy(lambda rng: DataObject(rng))
+
+
+def _np_arrays(dtype, shape, *, elements: Strategy) -> Strategy:
+    """``hypothesis.extra.numpy.arrays`` subset: fixed shape + elements."""
+    shape = (shape,) if isinstance(shape, int) else tuple(shape)
+    size = int(np.prod(shape)) if shape else 1
+
+    def _draw(rng):
+        flat = [elements.sample(rng) for _ in range(size)]
+        return np.asarray(flat, dtype=dtype).reshape(shape)
+
+    return Strategy(_draw)
+
+
+def settings(*args, max_examples: int = _DEFAULT_MAX_EXAMPLES, **kwargs):
+    """Decorator recording ``max_examples``; other knobs are no-ops."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    # bare ``@settings`` (not used in this repo, but harmless)
+    if args and callable(args[0]):
+        return deco(args[0])
+    return deco
+
+
+def given(**strategies):
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def deco(fn):
+        max_examples = getattr(
+            fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES
+        )
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for i in range(max_examples):
+                rng = np.random.default_rng((seed0, i))
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    shown = {
+                        k: v
+                        for k, v in drawn.items()
+                        if not isinstance(v, DataObject)
+                    }
+                    raise AssertionError(
+                        f"falsifying example (fallback draw {i}): {shown!r}"
+                    ) from e
+
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest must not see the drawn parameters as fixtures: present
+        # the wrapper with the original signature minus the given() names.
+        sig = inspect.signature(fn)
+        remaining = [
+            p for name, p in sig.parameters.items() if name not in strategies
+        ]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register fake ``hypothesis`` / ``hypothesis.strategies`` /
+    ``hypothesis.extra.numpy`` modules in ``sys.modules`` so the test
+    modules' top-level imports resolve against this shim."""
+    import sys
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__is_fallback__ = True
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists", "data"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.Strategy = Strategy
+
+    extra_mod = types.ModuleType("hypothesis.extra")
+    hnp_mod = types.ModuleType("hypothesis.extra.numpy")
+    hnp_mod.arrays = _np_arrays
+
+    hyp.strategies = st_mod
+    hyp.extra = extra_mod
+    extra_mod.numpy = hnp_mod
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    sys.modules["hypothesis.extra"] = extra_mod
+    sys.modules["hypothesis.extra.numpy"] = hnp_mod

@@ -7,3 +7,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+# Property tests prefer real hypothesis (requirements-dev.txt); in
+# hermetic containers without it, install the deterministic fallback shim
+# so the same test modules still collect and run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import sys
+
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()

@@ -1,0 +1,342 @@
+"""Block-CSR layout: round-trips, oracle, and the occupancy-exact kernel.
+
+Kernel runs in ``interpret=True`` on CPU (identical kernel body to TPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dnn
+from repro.core.semiring import get_semiring
+from repro.kernels import bcsr_spmm as bcsr_kernel
+from repro.kernels import bsr_spmm as bsr_kernel
+from repro.kernels import ops, ref
+from repro.sparse import BlockCSRMatrix, BlockSparseMatrix, ops as sops
+
+ALL_SEMIRINGS = ["plus_times", "max_plus", "min_plus", "max_min", "min_max"]
+
+
+def _skewed(seed=0, m=128, block=16, total=10, skew=0.9):
+    return BlockCSRMatrix.random_skewed(
+        seed, (m, m), (block, block), total_blocks=total, skew=skew
+    )
+
+
+# --- layout round-trips -----------------------------------------------------
+
+
+def test_roundtrip_bsr_csr_dense():
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(0), (64, 96), (8, 8), blocks_per_row=4
+    )
+    c = BlockCSRMatrix.from_bsr(a)
+    np.testing.assert_array_equal(c.to_dense(), a.to_dense())
+    np.testing.assert_array_equal(c.to_bsr().to_dense(), a.to_dense())
+    assert int(c.nnz_blocks) == int(a.nnz_blocks)
+    assert c.total_blocks == int(a.nnz_blocks)  # no pad unless asked
+
+
+def test_roundtrip_from_dense():
+    rng = np.random.default_rng(1)
+    dense = rng.normal(size=(48, 32)).astype(np.float32)
+    dense[8:24, :] = 0.0  # two empty block-rows
+    dense[:, 24:] = 0.0
+    c = BlockCSRMatrix.from_dense(dense, (8, 8))
+    np.testing.assert_array_equal(c.to_dense(), dense)
+    counts = np.diff(np.asarray(c.row_ptr))
+    assert counts[1] == 0 and counts[2] == 0
+
+
+def test_csr_order_invariants():
+    """row_id non-decreasing; col ascending within each row; row_ptr
+    consistent with row_id."""
+    c = _skewed(seed=3, total=17, skew=0.7)
+    row_id = np.asarray(c.row_id)[np.asarray(c.valid)]
+    cols = np.asarray(c.col_idx)[np.asarray(c.valid)]
+    assert (np.diff(row_id) >= 0).all()
+    for r in np.unique(row_id):
+        rc = cols[row_id == r]
+        assert (np.diff(rc) > 0).all()
+    row_ptr = np.asarray(c.row_ptr)
+    np.testing.assert_array_equal(
+        np.bincount(row_id, minlength=c.n_row_blocks),
+        row_ptr[1:] - row_ptr[:-1],
+    )
+
+
+def test_padded_tail_is_inert():
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(2), (32, 32), (8, 8), blocks_per_row=2
+    )
+    c = BlockCSRMatrix.from_bsr(a)
+    cp = BlockCSRMatrix.from_bsr(a, pad_to=c.total_blocks + 6)
+    assert cp.total_blocks == c.total_blocks + 6
+    np.testing.assert_array_equal(cp.to_dense(), c.to_dense())
+    b = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    np.testing.assert_allclose(
+        ops.bcsr_spmm(cp, b), ops.bcsr_spmm(c, b), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_from_bsr_rejects_too_small_pad():
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(4), (32, 32), (8, 8), blocks_per_row=2
+    )
+    with pytest.raises(ValueError):
+        BlockCSRMatrix.from_bsr(a, pad_to=3)
+
+
+def test_pytree_roundtrip_and_jit():
+    c = _skewed(seed=5, total=8)
+    leaves, treedef = jax.tree_util.tree_flatten(c)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(rebuilt.to_dense(), c.to_dense())
+
+    b = jax.random.normal(jax.random.PRNGKey(6), (c.shape[1], 8))
+
+    @jax.jit
+    def f(a, b):
+        return sops.bcsr_matmul(a, b)
+
+    np.testing.assert_allclose(f(c, b), sops.bcsr_matmul(c, b), rtol=1e-6)
+
+
+# --- oracle vs the ELL oracle ------------------------------------------------
+
+
+@pytest.mark.parametrize("semiring", ALL_SEMIRINGS)
+def test_oracle_matches_ell_oracle(semiring):
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(7), (64, 96), (8, 8), blocks_per_row=4
+    )
+    c = BlockCSRMatrix.from_bsr(a)
+    b = jax.random.normal(jax.random.PRNGKey(8), (96, 10))
+    sr = get_semiring(semiring)
+    np.testing.assert_allclose(
+        sops.bcsr_matmul(c, b, sr),
+        sops.bsr_matmul(a, b, sr),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# --- kernel vs oracle ---------------------------------------------------------
+
+BCSR_CASES = [
+    # (m, k, n, block, bpr)
+    (64, 64, 32, (8, 8), 2),
+    (128, 256, 48, (16, 16), 5),
+    (256, 128, 100, (8, 16), 4),  # rectangular blocks + ragged n
+]
+
+
+@pytest.mark.parametrize("m,k,n,block,bpr", BCSR_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=str)
+def test_bcsr_spmm_plus_times(m, k, n, block, bpr, dtype):
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(m + k + n), (m, k), block, blocks_per_row=bpr
+    ).astype(dtype)
+    c = BlockCSRMatrix.from_bsr(a)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
+    tol = (
+        dict(rtol=2e-2, atol=2e-2)
+        if dtype == jnp.bfloat16
+        else dict(rtol=2e-5, atol=2e-5)
+    )
+    np.testing.assert_allclose(
+        np.asarray(ops.bcsr_spmm(c, b), np.float32),
+        np.asarray(ref.bcsr_spmm_ref(c, b), np.float32),
+        **tol,
+    )
+
+
+@pytest.mark.parametrize("semiring", ALL_SEMIRINGS)
+def test_bcsr_spmm_all_semirings(semiring):
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(9), (64, 64), (8, 8), blocks_per_row=3
+    )
+    c = BlockCSRMatrix.from_bsr(a)
+    b = jax.random.normal(jax.random.PRNGKey(10), (64, 16))
+    np.testing.assert_allclose(
+        ops.bcsr_spmm(c, b, semiring_name=semiring),
+        ref.bcsr_spmm_ref(c, b, semiring_name=semiring),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("semiring", ALL_SEMIRINGS)
+def test_bcsr_spmm_skewed_with_empty_rows(semiring):
+    """Skewed occupancy incl. block-rows with zero stored blocks — the
+    topology the ELL pad punishes worst and empty rows the CSR grid
+    never visits (wrapper must fill them with the semiring zero)."""
+    c = _skewed(seed=11, m=128, block=16, total=10, skew=0.9)
+    counts = np.diff(np.asarray(c.row_ptr))
+    assert (counts == 0).any(), "want at least one empty block-row"
+    assert counts.max() >= 4 * max(int(np.median(counts)), 1), "want skew"
+    b = jax.random.normal(jax.random.PRNGKey(12), (128, 8))
+    np.testing.assert_allclose(
+        ops.bcsr_spmm(c, b, semiring_name=semiring),
+        ref.bcsr_spmm_ref(c, b, semiring_name=semiring),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("skewed", [False, True])
+def test_bcsr_spmm_fused_epilogue(skewed):
+    if skewed:
+        c = _skewed(seed=13, m=128, block=16, total=9, skew=0.85)
+        m, k = c.shape
+    else:
+        a = BlockSparseMatrix.random(
+            jax.random.PRNGKey(14), (64, 64), (8, 8), blocks_per_row=3
+        )
+        c = BlockCSRMatrix.from_bsr(a)
+        m, k = c.shape
+    b = jax.random.normal(jax.random.PRNGKey(15), (k, 24))
+    bias = jax.random.normal(jax.random.PRNGKey(16), (m,))
+    out = ops.bcsr_spmm(c, b, bias, fuse_bias_relu=True)
+    np.testing.assert_allclose(
+        out,
+        ref.bcsr_spmm_ref(c, b, bias=bias, fuse_bias_relu=True),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+    assert float(out.min()) >= 0.0
+
+
+def test_bcsr_matches_ell_kernel():
+    """Cross-kernel: CSR grid result == ELL grid result on same matrix."""
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(17), (64, 64), (8, 8), blocks_per_row=3
+    )
+    c = BlockCSRMatrix.from_bsr(a)
+    b = jax.random.normal(jax.random.PRNGKey(18), (64, 32))
+    np.testing.assert_allclose(
+        ops.bcsr_spmm(c, b), ops.bsr_spmm(a, b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_grid_steps_scale_with_true_nnz():
+    """The tentpole claim: on a skewed topology at equal nnz, the CSR
+    grid runs strictly fewer steps than the ELL grid."""
+    c = _skewed(seed=19, m=256, block=16, total=20, skew=0.9)
+    a = c.to_bsr()
+    n = 128
+    nrb, mbpr = a.col_idx.shape
+    ell_steps = nrb * mbpr * (n // 128)
+    csr_steps = bcsr_kernel.grid_steps(c, n, block_n=128)
+    assert csr_steps == c.total_blocks * (n // 128)
+    assert csr_steps < ell_steps, (csr_steps, ell_steps)
+    # and the two kernels agree on the result
+    b = jax.random.normal(jax.random.PRNGKey(20), (256, n))
+    np.testing.assert_allclose(
+        ops.bcsr_spmm(c, b), ops.bsr_spmm(a, b), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("semiring", ["log_plus", "lor_land", "xor_and"])
+def test_oracle_exotic_semirings(semiring):
+    """Layouts stay interchangeable on the generic-⊕ semirings too."""
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(40), (32, 32), (8, 8), blocks_per_row=2
+    )
+    c = BlockCSRMatrix.from_bsr(a)
+    b = (jax.random.uniform(jax.random.PRNGKey(41), (32, 6)) > 0.5).astype(
+        jnp.float32
+    )
+    sr = get_semiring(semiring)
+    np.testing.assert_allclose(
+        np.asarray(sops.bcsr_matmul(c, b, sr), np.float32),
+        np.asarray(sops.bsr_matmul(a, b, sr), np.float32),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# --- transpose ----------------------------------------------------------------
+
+
+def test_transpose_matches_dense():
+    c = _skewed(seed=30, m=128, block=16, total=12, skew=0.8)
+    t = c.transpose()
+    np.testing.assert_array_equal(
+        np.asarray(t.to_dense()), np.asarray(c.to_dense()).T
+    )
+    assert t.shape == (c.shape[1], c.shape[0])
+    # canonical CSR order is preserved
+    row_id = np.asarray(t.row_id)[np.asarray(t.valid)]
+    assert (np.diff(row_id) >= 0).all()
+
+
+def test_transpose_is_jittable_with_padding():
+    a = BlockSparseMatrix.random(
+        jax.random.PRNGKey(31), (64, 96), (8, 16), blocks_per_row=3
+    )
+    c = BlockCSRMatrix.from_bsr(a, pad_to=int(a.nnz_blocks) + 4)
+    t = jax.jit(lambda x: x.transpose())(c)
+    np.testing.assert_array_equal(
+        np.asarray(t.to_dense()), np.asarray(c.to_dense()).T
+    )
+    # transposed matrix still works through the kernel wrapper
+    b = jax.random.normal(jax.random.PRNGKey(32), (64, 8))
+    np.testing.assert_allclose(
+        ops.bcsr_spmm(t, b),
+        np.asarray(c.to_dense()).T @ np.asarray(b),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_graphblas_vxm_and_transpose_accept_bcsr():
+    from repro.core import graphblas as gb
+
+    c = _skewed(seed=33, m=64, block=8, total=14, skew=0.5)
+    v = jax.random.normal(jax.random.PRNGKey(34), (64,))
+    np.testing.assert_allclose(
+        gb.vxm(v, c),
+        np.asarray(v) @ np.asarray(c.to_dense()),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(gb.transpose(c).to_dense()),
+        np.asarray(c.to_dense()).T,
+    )
+
+
+# --- dispatch ----------------------------------------------------------------
+
+
+def test_preferred_layout_dispatch():
+    regular = BlockSparseMatrix.random(
+        jax.random.PRNGKey(21), (64, 64), (8, 8), blocks_per_row=4
+    )
+    assert dnn.preferred_layout(regular) == "ell"
+    assert isinstance(dnn.to_preferred_layout(regular), BlockSparseMatrix)
+
+    skew_dense = np.zeros((64, 64), np.float32)
+    skew_dense[:8, :] = 1.0  # one full row-block, rest nearly empty
+    skew_dense[8:16, :8] = 1.0
+    skewed = BlockSparseMatrix.from_dense(skew_dense, (8, 8))
+    assert dnn.preferred_layout(skewed) == "bcsr"
+    assert isinstance(dnn.to_preferred_layout(skewed), BlockCSRMatrix)
+
+
+def test_dnn_layer_bcsr_matches_bsr():
+    w = BlockSparseMatrix.random(
+        jax.random.PRNGKey(22), (32, 32), (8, 8), blocks_per_row=2
+    )
+    wc = BlockCSRMatrix.from_bsr(w)
+    y = jax.random.uniform(jax.random.PRNGKey(23), (32, 8))
+    b = jax.random.uniform(jax.random.PRNGKey(24), (32,))
+    for fused in (True, False):
+        np.testing.assert_allclose(
+            dnn.dnn_layer(wc, y, b, fused=fused),
+            dnn.dnn_layer(w, y, b, fused=fused),
+            rtol=1e-5,
+            atol=1e-5,
+        )

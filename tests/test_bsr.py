@@ -112,6 +112,51 @@ def test_jit_through_bsr():
     np.testing.assert_allclose(f(bsr, y), sops.bsr_matmul(bsr, y), rtol=1e-6)
 
 
+def test_transpose_matches_dense():
+    key = jax.random.PRNGKey(20)
+    bsr = BlockSparseMatrix.random(key, (64, 96), (8, 16), blocks_per_row=3)
+    t = bsr.transpose()
+    assert t.shape == (96, 64)
+    assert t.block_shape == (16, 8)
+    np.testing.assert_array_equal(
+        np.asarray(t.to_dense()), np.asarray(bsr.to_dense()).T
+    )
+
+
+def test_transpose_skewed_and_empty_columns():
+    # column-block occupancy 3/2/1/0 → transposed rows 3/2/1/0 wide
+    pattern = np.array(
+        [[1.0, 1, 0, 0], [1, 0, 1, 0], [1, 1, 1, 0], [0, 0, 0, 0]]
+    )
+    dense = np.kron(pattern, np.ones((8, 8), np.float32))
+    bsr = BlockSparseMatrix.from_dense(dense, (8, 8))
+    t = bsr.transpose()
+    np.testing.assert_array_equal(np.asarray(t.to_dense()), dense.T)
+    assert t.max_blocks_per_row == 3
+
+
+def test_transpose_is_jittable_and_involutive():
+    key = jax.random.PRNGKey(21)
+    bsr = BlockSparseMatrix.random(key, (64, 64), (8, 8), blocks_per_row=3)
+
+    # device-side + jittable given a static output pad width
+    t = jax.jit(lambda a: a.transpose(pad_to=8))(bsr)
+    np.testing.assert_array_equal(
+        np.asarray(t.to_dense()), np.asarray(bsr.to_dense()).T
+    )
+    # transpose ∘ transpose = identity (on the dense view)
+    np.testing.assert_array_equal(
+        np.asarray(t.transpose().to_dense()), np.asarray(bsr.to_dense())
+    )
+
+
+def test_transpose_rejects_small_pad():
+    key = jax.random.PRNGKey(22)
+    bsr = BlockSparseMatrix.random(key, (64, 64), (8, 8), blocks_per_row=4)
+    with pytest.raises(ValueError):
+        bsr.transpose(pad_to=1)
+
+
 @hypothesis.given(
     nrb=st.integers(1, 4),
     ncb=st.integers(1, 4),
