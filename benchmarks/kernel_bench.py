@@ -21,6 +21,14 @@ track the trajectory:
   steps:  per-topology {ell, csr} grid steps + the ratio
   fused:  pallas_call counts (L vs 1) + layered/fused XLA wall-clock
   sweep:  inverse-sparsity × skew wall-clock for the XLA arms
+  train:  the TRAINING arm — a masked sparse MLP train step with the
+          kernels (and their custom VJPs) in the hot path: pallas_call
+          counts per step (forward kernels + the CSR backward-dX
+          kernel), forward/backward grid-step accounting, and the loss
+          trajectory proving the sparse stack actually learns.
+
+See ``docs/benchmarks.md`` for the full field reference and how CI's
+benchmark smoke job consumes this file.
 """
 
 from __future__ import annotations
@@ -141,6 +149,100 @@ def fused_arm(m: int, L: int, bpr: int, n: int):
     }
 
 
+def train_arm(m: int, L: int, block: int, bpr: int, n: int, steps: int):
+    """Train a masked sparse MLP with the kernels in BOTH passes.
+
+    Layer layouts alternate ELL / block-CSR so both custom VJPs are
+    exercised; the step function's jaxpr is inspected for pallas_call
+    counts: every layer's forward is a kernel, and every CSR layer's
+    backward dX = Wᵀ·dY is a SECOND kernel call (on the device-side
+    transpose). ELL backward runs the occupancy-exact XLA scatter-⊕
+    (same work scaling, no extra grid steps). Interpret mode off-TPU —
+    keep the shapes small.
+    """
+    from repro.train.optimizer import sgd
+    from repro.train.sparse import (
+        grad_sparsity_preserved,
+        init_sparse_mlp_state,
+        make_sparse_train_step,
+    )
+
+    ws = []
+    for i in range(L):
+        w = BlockSparseMatrix.random(
+            jax.random.PRNGKey(100 + i), (m, m), (block, block), blocks_per_row=bpr,
+            minval=-0.5, maxval=0.5,
+        )
+        w = w.map_blocks(lambda x: x / (bpr * block) ** 0.5)
+        ws.append(BlockCSRMatrix.from_bsr(w) if i % 2 else w)
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+    layouts = ["bcsr" if isinstance(w, BlockCSRMatrix) else "ell" for w in ws]
+
+    # Teacher with positive-mean weights (paper §V-B's U[-1, 3) values,
+    # rescaled): its targets are O(1) while the small-init student
+    # starts near zero — a non-trivial, realizable regression task.
+    teacher = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(200 + i), (m, m), (block, block), blocks_per_row=bpr,
+        ).map_blocks(lambda x: x / (bpr * block))
+        for i in range(L)
+    ]
+
+    # Fixed full batch: deterministic, monotone loss in a handful of steps.
+    y0 = jax.random.uniform(jax.random.PRNGKey(300), (m, n), jnp.float32)
+    batch = {"y0": y0, "targets": dnn.dnn_forward(teacher, bs, y0, fused=True)}
+
+    opt = sgd(3.0, momentum=0.0)
+    state = init_sparse_mlp_state(ws, bs, opt)
+    step = make_sparse_train_step(opt, use_kernel=True)
+
+    jaxpr = jax.make_jaxpr(step)(state, batch)
+    pallas_calls = str(jaxpr).count("pallas_call")
+
+    # sparsity-preservation spot check on the raw cotangent
+    _, (dws, _) = dnn.dnn_value_and_grad(
+        state.weights, state.biases, batch["y0"], batch["targets"]
+    )
+    pattern_ok = grad_sparsity_preserved(state.weights, dws)
+
+    step = jax.jit(step)
+    losses = []
+    for i in range(steps):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        print(f"train step {i} loss={losses[-1]:.6f}", flush=True)
+
+    bn = min(128, n)
+    fwd_steps = sum(
+        bcsr_kernel.grid_steps(w, n, bn)
+        if isinstance(w, BlockCSRMatrix)
+        else _grid_steps_ell(w, n, bn)
+        for w in ws
+    )
+    # backward kernel steps: one CSR kernel per CSR layer, on the
+    # transpose (same total_blocks → same step count as its forward)
+    bwd_steps = sum(
+        bcsr_kernel.grid_steps(w, n, bn)
+        for w in ws
+        if isinstance(w, BlockCSRMatrix)
+    )
+    return {
+        "m": m,
+        "layers": L,
+        "block": block,
+        "blocks_per_row": bpr,
+        "n": n,
+        "layout_per_layer": layouts,
+        "pallas_calls_per_step": pallas_calls,
+        "pallas_calls_forward_only": L,
+        "grid_steps_forward": fwd_steps,
+        "grid_steps_backward_kernel": bwd_steps,
+        "weight_cotangent_pattern_preserved": pattern_ok,
+        "losses": losses,
+        "loss_decreased": losses[-1] < losses[0],
+    }
+
+
 def run(quick: bool = False):
     n = 64
     sizes = [256] if quick else [256, 512, 1024]
@@ -175,18 +277,39 @@ def run(quick: bool = False):
         flush=True,
     )
 
+    train = train_arm(
+        m=64 if quick else 128,
+        L=3,
+        block=16,
+        bpr=2,
+        n=32,
+        steps=3 if quick else 6,
+    )
+    print(
+        f"train: L={train['layers']} layouts={train['layout_per_layer']} "
+        f"pallas/step {train['pallas_calls_per_step']} "
+        f"(fwd-only would be {train['pallas_calls_forward_only']}), "
+        f"loss {train['losses'][0]:.4f}→{train['losses'][-1]:.4f}",
+        flush=True,
+    )
+
     # The tentpole invariants, asserted on every benchmark run:
     for r in topologies:
         if r["max_blocks_per_row"] > r["mean_blocks_per_row"]:
             assert r["grid_steps_csr"] < r["grid_steps_ell"], r
     assert fused["pallas_calls_fused"] == 1
     assert fused["max_rel_err_vs_layered"] <= 1e-5
+    # training arm: kernels in both passes, learning, sparsity preserved
+    assert train["loss_decreased"], train["losses"]
+    assert train["weight_cotangent_pattern_preserved"]
+    assert train["pallas_calls_per_step"] > train["pallas_calls_forward_only"]
 
     payload = {
         "backend": jax.default_backend(),
         "interpret_kernels": kernel_ops.auto_interpret(),
         "topologies": topologies,
         "fused": fused,
+        "train": train,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

@@ -1,18 +1,25 @@
-"""End-to-end driver: train a ~100M-parameter ReLU MLP (the paper's own
-architecture family), then prune → sparse-retrain — the Deep-Compression
-pipeline the paper cites as the source of sparse weight matrices.
+"""End-to-end driver: dense-train → block-prune → sparse-retrain the
+paper's square ReLU MLP, with the sparse Pallas kernels (and their
+custom VJPs) in the training hot path.
 
 Phases:
-  1. dense training on a learnable synthetic task (fixed random teacher);
-  2. block-magnitude pruning of every layer to the target density
-     (weights → ELL-padded BSR, the TPU-native sparse format);
-  3. sparse retraining — gradients flow through the BSR blocks, topology
-     stays frozen (exactly the paper's "retrain the pruned network").
+  1. dense training on a fixed random teacher (regression — the panel
+     convention of the paper: features down, batch across);
+  2. block-magnitude pruning of every layer to the target density —
+     weights become ELL-padded BSR (``--layout bcsr`` re-flattens them
+     to the occupancy-exact block-CSR layout; ``--layout auto`` applies
+     ``repro.core.dnn.preferred_layout`` per layer);
+  3. sparse retraining through ``repro.train.sparse``: forward AND
+     backward run the SpMM kernels via their ``jax.custom_vjp`` rules —
+     dX = Wᵀ·dY (a Pallas kernel call on the block-CSR transpose for
+     CSR layers) and weight cotangents only at stored blocks, so the
+     pruned topology is frozen by construction.
 
-Defaults build 24 layers of 2048² ≈ 100.7M params; use --m/--layers to
-shrink for a quick run.
+``--backend kernel`` forces the Pallas path (interpret mode off-TPU:
+correct but slow — shrink --m/--layers); ``--backend xla`` uses the jnp
+oracle forms (identical math, fast on CPU); ``auto`` picks kernel on TPU.
 
-Run: PYTHONPATH=src python examples/train_sparse_mlp.py --steps 300
+Run: PYTHONPATH=src python examples/train_sparse_mlp.py --m 256 --layers 4 --steps 60
 """
 
 import argparse
@@ -21,98 +28,156 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import graphblas_mlp
-from repro.models.model import Model
-from repro.train import adamw
-from repro.train.optimizer import warmup_cosine
-from repro.train.trainer import init_train_state, make_train_step
+from repro.core import dnn, pruning
+from repro.sparse.bcsr import BlockCSRMatrix
+from repro.train.optimizer import adamw, warmup_cosine
+from repro.train.sparse import (
+    grad_sparsity_preserved,
+    init_sparse_mlp_state,
+    make_sparse_train_step,
+)
+
+Array = jax.Array
 
 
-def make_batch(key, m: int, batch: int, teacher):
-    x = jax.random.uniform(key, (batch, m))
-    labels = jnp.argmax(x @ teacher, axis=-1)  # learnable mapping
-    return {"inputs": x, "labels": labels[:, None]}
+def make_batch(key, m: int, batch: int, teacher_ws, teacher_bs):
+    """Teacher-generated (y0, targets) panels — a learnable mapping whose
+    targets are realizable by the student architecture."""
+    y0 = jax.random.uniform(key, (m, batch))
+    targets = dnn.dnn_forward(teacher_ws, teacher_bs, y0, fused=True)
+    return {"y0": y0, "targets": targets}
 
 
-def run_phase(model, state, step_fn, teacher, *, steps, seed, tag):
-    m = model.cfg.d_model
+def run_phase(state, step_fn, make_batch_fn, *, steps, seed, tag):
     t0 = time.monotonic()
     first = last = None
     for i in range(steps):
-        batch = make_batch(jax.random.key(seed + i), m, 64, teacher)
+        batch = make_batch_fn(jax.random.key(seed + i))
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         first = first if first is not None else loss
         last = loss
         if i % max(1, steps // 10) == 0 or i == steps - 1:
             dt = time.monotonic() - t0
-            print(f"[{tag}] step {i:4d} loss={loss:.4f} ({dt:.1f}s)", flush=True)
-    print(f"[{tag}] loss {first:.4f} → {last:.4f}")
+            print(f"[{tag}] step {i:4d} loss={loss:.6f} ({dt:.1f}s)", flush=True)
+    print(f"[{tag}] loss {first:.6f} → {last:.6f}")
     return state, last
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--m", type=int, default=2048)
-    ap.add_argument("--layers", type=int, default=24)
-    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--retrain-steps", type=int, default=None)
     ap.add_argument("--inverse-sparsity", type=int, default=4)
-    ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--block", type=int, default=16)
+    ap.add_argument("--layout", choices=["ell", "bcsr", "auto"], default="auto")
+    ap.add_argument("--backend", choices=["auto", "kernel", "xla"], default="auto")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = graphblas_mlp.make_config(
-        m=args.m,
-        num_layers=args.layers,
-        inverse_sparsity=args.inverse_sparsity,
-        block=args.block,
+    m, L = args.m, args.layers
+    use_kernel = (
+        jax.default_backend() == "tpu"
+        if args.backend == "auto"
+        else args.backend == "kernel"
     )
-    model = Model(cfg)
-    n_params = model.param_count()
-    print(f"== prune→retrain driver: {args.layers}L of {args.m}² "
-          f"= {n_params/1e6:.1f}M params, target 1/{args.inverse_sparsity} density ==")
-
-    teacher = jax.random.normal(jax.random.key(99), (args.m, args.m)) / args.m**0.5
-    opt = adamw(warmup_cosine(1e-3, 20, args.steps * 2), weight_decay=0.0)
-    state = init_train_state(model, opt, jax.random.key(args.seed))
-    step_fn = jax.jit(make_train_step(model, opt))
-
-    # Phase 1: dense training
-    state, dense_loss = run_phase(
-        model, state, step_fn, teacher,
-        steps=args.steps, seed=args.seed, tag="dense",
-    )
-
-    # Phase 2: block-magnitude prune → BSR
-    sparse_params = model.sparsify(state.params)
-    dense_bytes = sum(
-        l.size * l.dtype.itemsize for l in jax.tree.leaves(state.params)
-    )
-    sparse_bytes = sum(
-        l.size * l.dtype.itemsize for l in jax.tree.leaves(sparse_params)
-    )
-    print(f"[prune] params {dense_bytes/2**20:.0f} MiB → {sparse_bytes/2**20:.0f} MiB")
-    loss0, _ = model.loss(
-        sparse_params, make_batch(jax.random.key(7), args.m, 64, teacher)
-    )
-    print(f"[prune] post-prune loss {float(loss0):.4f} (dense was {dense_loss:.4f})")
-
-    # Phase 3: sparse retraining (BSR blocks are trainable pytree leaves)
-    state2 = init_train_state(model, opt, jax.random.key(args.seed))._replace(
-        params=sparse_params
-    )
-    state2 = state2._replace(opt=opt.init(sparse_params))
-    retrain = args.retrain_steps or max(args.steps // 2, 10)
-    state2, sparse_loss = run_phase(
-        model, state2, step_fn, teacher,
-        steps=retrain, seed=args.seed + 10_000, tag="sparse-retrain",
-    )
-    rec = (dense_loss - sparse_loss) if sparse_loss < float(loss0) else 0.0
     print(
-        f"[done] dense {dense_loss:.4f} | post-prune {float(loss0):.4f} | "
-        f"retrained-sparse {sparse_loss:.4f} "
-        f"({'recovered' if sparse_loss <= float(loss0) else 'check schedule'})"
+        f"== prune→retrain driver: {L}L of {m}² "
+        f"({L * m * m / 1e6:.1f}M params), target 1/{args.inverse_sparsity} "
+        f"density, backend={'pallas-kernel' if use_kernel else 'xla-oracle'} =="
+    )
+
+    # teacher = a frozen BLOCK-SPARSE net at the target density, so the
+    # pruned student can represent the mapping exactly (realizable task)
+    ncb = m // args.block
+    bpr = max(1, round(ncb / args.inverse_sparsity))
+    tkeys = jax.random.split(jax.random.key(99), L)
+    teacher_ws = [
+        pruning.block_prune(
+            jax.random.normal(k, (m, m)) * (0.7 / m**0.5),
+            (args.block, args.block),
+            bpr,
+        )
+        for k in tkeys
+    ]
+    teacher_bs = [jnp.zeros((m,)) for _ in range(L)]
+
+    def batch_fn(key):
+        return make_batch(key, m, args.batch, teacher_ws, teacher_bs)
+
+    # student init: dense
+    skeys = jax.random.split(jax.random.key(args.seed), L)
+    weights = [jax.random.normal(k, (m, m)) / m**0.5 for k in skeys]
+    biases = [jnp.zeros((m,)) for _ in range(L)]
+
+    opt = adamw(
+        warmup_cosine(3e-3, 10, args.steps * 2), weight_decay=0.0
+    )
+
+    # Phase 1: dense training (XLA matmuls — dense has no sparse kernel)
+    state = init_sparse_mlp_state(weights, biases, opt)
+    step_dense = jax.jit(make_sparse_train_step(opt, use_kernel=False))
+    state, dense_loss = run_phase(
+        state, step_dense, batch_fn, steps=args.steps, seed=args.seed, tag="dense"
+    )
+
+    # Phase 2: block-magnitude prune → BSR (optionally re-layout)
+    sparse_ws = []
+    for w in state.weights:
+        sw = pruning.block_prune(w, (args.block, args.block), bpr)
+        if args.layout == "bcsr":
+            sw = BlockCSRMatrix.from_bsr(sw)
+        elif args.layout == "auto":
+            sw = dnn.to_preferred_layout(sw)
+        sparse_ws.append(sw)
+    dense_bytes = L * m * m * 4
+    sparse_bytes = sum(w.nbytes for w in sparse_ws)
+    layouts = [type(w).__name__ for w in sparse_ws]
+    print(
+        f"[prune] params {dense_bytes / 2**20:.1f} MiB → "
+        f"{sparse_bytes / 2**20:.1f} MiB; layouts {sorted(set(layouts))}"
+    )
+    probe = batch_fn(jax.random.key(7))
+    out0 = dnn.dnn_forward_trainable(
+        sparse_ws, state.biases, probe["y0"], use_kernel=use_kernel
+    )
+    loss0 = float(0.5 * jnp.mean((out0 - probe["targets"]) ** 2))
+    print(f"[prune] post-prune loss {loss0:.6f} (dense was {dense_loss:.6f})")
+
+    # Phase 3: sparse retraining — kernels (+ custom VJPs) in the hot path
+    retrain = args.retrain_steps or max(args.steps // 2, 10)
+    opt2 = adamw(warmup_cosine(1e-3, 5, retrain), weight_decay=0.0)
+    state2 = init_sparse_mlp_state(sparse_ws, state.biases, opt2)
+    step_sparse = jax.jit(
+        make_sparse_train_step(opt2, use_kernel=use_kernel)
+    )
+    # one-shot invariant check: the weight cotangent lives in the primal
+    # sparsity pattern (the custom-VJP guarantee)
+    _, (dws, _) = dnn.dnn_value_and_grad(
+        state2.weights,
+        state2.biases,
+        probe["y0"],
+        probe["targets"],
+        use_kernel=use_kernel,
+    )
+    assert grad_sparsity_preserved(state2.weights, dws)
+    print("[check] weight cotangent sparsity pattern == primal pattern")
+
+    state2, sparse_loss = run_phase(
+        state2,
+        step_sparse,
+        batch_fn,
+        steps=retrain,
+        seed=args.seed + 10_000,
+        tag="sparse-retrain",
+    )
+    verdict = "recovered" if sparse_loss <= loss0 else "check schedule"
+    print(
+        f"[done] dense {dense_loss:.6f} | post-prune {loss0:.6f} | "
+        f"retrained-sparse {sparse_loss:.6f} ({verdict})"
     )
 
 

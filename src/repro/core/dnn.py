@@ -24,6 +24,14 @@ Weight layouts: dense arrays, ELL-padded :class:`BlockSparseMatrix`
 entry point dispatches on the weight type. ``dnn_forward_scan`` is the
 stacked/scanned variant used inside jit for deep networks (one layer
 traced once).
+
+Training: ``dnn_forward_trainable`` is the ``value_and_grad``-compatible
+forward — every sparse layer goes through the custom-VJP Pallas kernel
+wrappers (``repro.kernels.ops``), so the backward pass computes
+dX = Wᵀ·dY and sparse-preserving weight cotangents with no densify
+(``repro.kernels.autodiff``). ``dnn_value_and_grad`` packages the usual
+loss → (loss, (dweights, dbiases)) step; the resident fused path is
+forward-only and refuses differentiation.
 """
 
 from __future__ import annotations
@@ -166,6 +174,77 @@ def dnn_forward_resident(
     stacked_b = jnp.stack(list(biases))
     return kernel_ops.fused_mlp_forward(
         stacked_w, stacked_b, y0, block_n=block_n, interpret=interpret
+    )
+
+
+def dnn_layer_trainable(
+    w: Weight, y: Array, b: Array, *, interpret: bool | None = None
+) -> Array:
+    """One differentiable layer max(W·Y + b⊗1ᵀ, 0) through the custom-VJP
+    kernel wrappers (dense weights use the XLA fused path, which JAX
+    differentiates natively)."""
+    from repro.kernels import ops as kernel_ops
+
+    if isinstance(w, BlockCSRMatrix):
+        return kernel_ops.bcsr_spmm(
+            w, y, b, fuse_bias_relu=True, interpret=interpret
+        )
+    if isinstance(w, BlockSparseMatrix):
+        return kernel_ops.bsr_spmm(
+            w, y, b, fuse_bias_relu=True, interpret=interpret
+        )
+    return sparse_ops.dense_matmul_fused_relu(w, y, b)
+
+
+def dnn_forward_trainable(
+    weights: Sequence[Weight],
+    biases: Sequence[Array],
+    y0: Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> Array:
+    """L-layer forward whose backward pass is kernel-resident.
+
+    ``use_kernel=True`` routes every sparse layer through the Pallas
+    kernels (custom VJPs: sparse-preserving dW, occupancy-exact dX);
+    ``use_kernel=False`` uses the jnp oracle paths (same math, XLA
+    autodiff — the pragmatic choice on CPU where kernels interpret).
+    Both are ``jax.value_and_grad``-compatible; the resident fused
+    forward is NOT (see ``dnn_forward_resident``).
+    """
+    y = y0
+    for w, b in zip(weights, biases):
+        if use_kernel:
+            y = dnn_layer_trainable(w, y, b, interpret=interpret)
+        else:
+            y = dnn_layer(w, y, b, fused=True)
+    return y
+
+
+def dnn_value_and_grad(
+    weights: Sequence[Weight],
+    biases: Sequence[Array],
+    y0: Array,
+    targets: Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+):
+    """The paper's DNN as a training step core: mean-squared loss of the
+    forward pass against ``targets``, differentiated wrt weights AND
+    biases. Returns ``(loss, (dweights, dbiases))`` where sparse weight
+    cotangents keep the primal layout (stored blocks only; integer
+    topology leaves carry float0 — optimizers skip them by dtype)."""
+
+    def loss_fn(ws, bs):
+        out = dnn_forward_trainable(
+            ws, bs, y0, use_kernel=use_kernel, interpret=interpret
+        )
+        return 0.5 * jnp.mean((out - targets) ** 2)
+
+    return jax.value_and_grad(loss_fn, argnums=(0, 1), allow_int=True)(
+        list(weights), list(biases)
     )
 
 

@@ -12,9 +12,14 @@ Kernel menu and when dispatch picks which (see ``repro.core.dnn``):
       right arm for skewed or magnitude-pruned topologies.
   fused_mlp       — VMEM-resident multi-layer forward for square
       ``stack_bsr`` stacks: one ``pallas_call`` for all L layers, no
-      inter-layer HBM activation traffic.
+      inter-layer HBM activation traffic. Forward-only (no VJP).
+
+``autodiff`` holds the ``jax.custom_vjp`` rules that make the two SpMM
+wrappers trainable (sparse-preserving weight cotangents, kernel-
+resident backward for the CSR layout); ``ops`` attaches them for the
+``plus_times`` semiring. See docs/kernels.md for the full contract.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import autodiff, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autodiff", "ops", "ref"]

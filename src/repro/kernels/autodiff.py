@@ -1,0 +1,240 @@
+"""Custom VJP rules that make the sparse Pallas kernels trainable.
+
+The paper's equations (y = h(Wᵀx + b)) cover training as well as
+inference, and the Graph Challenge studies (arXiv:1909.05631,
+arXiv:2004.01181) show sparse-times-dense products dominate BOTH passes.
+This module closes the loop: ``jax.custom_vjp`` rules for the two SpMM
+kernels so ``jax.grad`` / ``jax.value_and_grad`` flow through them with
+**no densification anywhere**:
+
+  primal      Z = A ⊕.⊗ B (+ fused ``max(Z + b·1ᵀ, 0)`` epilogue)
+  dB  (dense) = Aᵀ · dZ          — occupancy-exact transpose product
+  dA  (sparse) at stored block positions ONLY:
+                dA[blk] = dZ_row(blk) · Bᵀ_col(blk)
+                (the sampled/SDDMM-style product; same ELL or CSR layout
+                 as the primal, padded/invalid slots exactly zero)
+  db  (bias)  = Σₙ dZ  (masked by the ReLU when the epilogue is fused)
+
+Backward-pass routing:
+
+  * ``bcsr`` — dB runs through the **Pallas CSR kernel itself** on
+    ``a.transpose()`` (the device-side block-CSR transpose is fully
+    jittable because ``total_blocks`` is static), so the backward hot
+    path is kernel-resident like the forward. dA uses the jnp sampled
+    product (``sparse.ops.bcsr_weight_cotangent``).
+  * ``bsr/ELL`` — the ELL transpose needs a static output pad width that
+    a traced weight cannot provide, so dB uses the occupancy-exact
+    scatter-⊕ (``sparse.ops.bsr_transpose_matmul``) and dA the sampled
+    product; both scale with stored blocks, neither densifies.
+  * ``fused_mlp`` — the VMEM-resident multi-layer kernel has NO VJP (its
+    per-layer activations never exist outside VMEM, so nothing can be
+    checkpointed); its rule raises with a pointer to the layered path.
+    ``serve.SparseDNNEngine(differentiable=True)`` routes around it.
+
+Only the arithmetic (``plus_times``) semiring is differentiable — ReLU
+is the fused max-plus step and its subgradient is handled here; the
+exotic semirings keep the primal-only kernel path
+(``repro.kernels.ops`` dispatches).
+
+Cotangent structure: the sparse weight's cotangent is a
+:class:`BlockSparseMatrix` / :class:`BlockCSRMatrix` whose float leaves
+carry the gradient and whose integer/bool topology leaves carry the
+``float0`` zeros JAX expects for non-differentiable leaves — optimizers
+that guard on param dtype (``repro.train.optimizer``) consume it as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import dtypes as jax_dtypes
+
+from repro.kernels import bcsr_spmm as _bcsr
+from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import fused_mlp as _fmlp
+from repro.sparse import ops as sparse_ops
+from repro.sparse.bcsr import BlockCSRMatrix
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+
+class SpmmConfig(NamedTuple):
+    """Static (hashable) kernel-call configuration threaded through the
+    custom_vjp as a nondiff argument."""
+
+    fuse_bias_relu: bool
+    block_n: int
+    interpret: bool
+
+
+def _float0_zeros(x) -> np.ndarray:
+    """The cotangent JAX expects for integer/bool primal leaves."""
+    return np.zeros(np.shape(x), jax_dtypes.float0)
+
+
+def _relu_mask_and_bias_grad(cfg: SpmmConfig, out: Array, g: Array, bias):
+    """Shared epilogue backward: push g through the fused max(·+b, 0)."""
+    g = g.astype(jnp.float32)
+    if cfg.fuse_bias_relu:
+        dz = jnp.where(out > 0, g, 0.0)
+        dbias = jnp.sum(dz, axis=1).astype(bias.dtype)
+    else:
+        dz = g
+        dbias = jnp.zeros_like(bias)
+    return dz, dbias
+
+
+# --------------------------------------------------------------------------
+# ELL-padded BSR kernel
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def bsr_spmm_diff(cfg: SpmmConfig, a: BlockSparseMatrix, b: Array, bias: Array):
+    """Differentiable ``bsr_spmm`` (plus_times). ``b.shape[1]`` must be a
+    multiple of ``cfg.block_n`` (the jit wrapper in ``kernels.ops`` pads)."""
+    return _bsr.bsr_spmm(
+        a,
+        b,
+        semiring_name="plus_times",
+        bias=bias,
+        fuse_bias_relu=cfg.fuse_bias_relu,
+        block_n=cfg.block_n,
+        interpret=cfg.interpret,
+    )
+
+
+def _bsr_fwd(cfg, a, b, bias):
+    out = bsr_spmm_diff(cfg, a, b, bias)
+    return out, (a, b, bias, out)
+
+
+def _bsr_bwd(cfg, res, g):
+    a, b, bias, out = res
+    dz, dbias = _relu_mask_and_bias_grad(cfg, out, g, bias)
+    # dB = Aᵀ·dZ — occupancy-exact scatter-⊕ (the ELL transpose's pad
+    # width is data-dependent, so the jnp path is the jittable one here).
+    db = sparse_ops.bsr_transpose_matmul(a, dz).astype(b.dtype)
+    # dA only at stored positions — primal's sparsity pattern preserved.
+    dblocks = sparse_ops.bsr_weight_cotangent(a, dz, b).astype(a.blocks.dtype)
+    da = BlockSparseMatrix(
+        dblocks,
+        _float0_zeros(a.col_idx),
+        _float0_zeros(a.block_mask),
+        a.shape,
+        a.block_shape,
+    )
+    return da, db, dbias
+
+
+bsr_spmm_diff.defvjp(_bsr_fwd, _bsr_bwd)
+
+
+# --------------------------------------------------------------------------
+# Occupancy-exact block-CSR kernel
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def bcsr_spmm_diff(cfg: SpmmConfig, a: BlockCSRMatrix, b: Array, bias: Array):
+    """Differentiable ``bcsr_spmm`` (plus_times). Same raw-kernel caveat
+    as the primal: empty block-rows are left unwritten — the ``kernels.
+    ops`` wrapper splices the fill in OUTSIDE this rule (so upstream
+    cotangents for empty rows arrive here already zeroed by the
+    ``where``'s own VJP, and the garbage rows can never leak)."""
+    return _bcsr.bcsr_spmm(
+        a,
+        b,
+        semiring_name="plus_times",
+        bias=bias,
+        fuse_bias_relu=cfg.fuse_bias_relu,
+        block_n=cfg.block_n,
+        interpret=cfg.interpret,
+    )
+
+
+def _bcsr_fwd(cfg, a, b, bias):
+    out = bcsr_spmm_diff(cfg, a, b, bias)
+    return out, (a, b, bias, out)
+
+
+def _bcsr_bwd(cfg, res, g):
+    a, b, bias, out = res
+    dz, dbias = _relu_mask_and_bias_grad(cfg, out, g, bias)
+    # dB = Aᵀ·dZ through the Pallas kernel itself: the block-CSR
+    # transpose is fully jittable (static total_blocks), so the backward
+    # pass stays on the occupancy-exact kernel grid (∝ true nnz).
+    at = a.transpose()
+    db_raw = _bcsr.bcsr_spmm(
+        at,
+        dz,
+        semiring_name="plus_times",
+        block_n=cfg.block_n,
+        interpret=cfg.interpret,
+    )
+    # Rows of Aᵀ with no stored blocks (= empty columns of A) are never
+    # visited by the kernel grid → their dB rows are identically zero.
+    empty_t = (at.row_ptr[1:] == at.row_ptr[:-1])
+    row_empty = jnp.repeat(
+        empty_t, at.block_shape[0], total_repeat_length=at.shape[0]
+    )
+    db = jnp.where(row_empty[:, None], 0.0, db_raw).astype(b.dtype)
+    # dA: sampled products at the stored blocks, CSR order preserved.
+    dvalues = sparse_ops.bcsr_weight_cotangent(a, dz, b).astype(a.values.dtype)
+    da = BlockCSRMatrix(
+        dvalues,
+        _float0_zeros(a.row_ptr),
+        _float0_zeros(a.row_id),
+        _float0_zeros(a.col_idx),
+        _float0_zeros(a.valid),
+        a.shape,
+        a.block_shape,
+    )
+    return da, db, dbias
+
+
+bcsr_spmm_diff.defvjp(_bcsr_fwd, _bcsr_bwd)
+
+
+# --------------------------------------------------------------------------
+# VMEM-resident fused multi-layer forward: explicitly NOT differentiable
+# --------------------------------------------------------------------------
+
+
+class FusedMlpConfig(NamedTuple):
+    block_n: int
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_mlp_forward_nondiff(
+    cfg: FusedMlpConfig, stacked_w: BlockSparseMatrix, stacked_b: Array, y0: Array
+):
+    """The fused kernel with a VJP rule that fails loudly (instead of the
+    opaque pallas_call transpose error) and says what to use instead."""
+    return _fmlp.fused_mlp_forward(
+        stacked_w, stacked_b, y0, block_n=cfg.block_n, interpret=cfg.interpret
+    )
+
+
+def _fused_fwd(cfg, stacked_w, stacked_b, y0):
+    return fused_mlp_forward_nondiff(cfg, stacked_w, stacked_b, y0), None
+
+
+def _fused_bwd(cfg, res, g):
+    raise NotImplementedError(
+        "fused_mlp_forward has no VJP: the VMEM-resident kernel never "
+        "materializes per-layer activations, so there is nothing to "
+        "checkpoint for the backward pass. Differentiate the layered "
+        "kernel path instead (repro.core.dnn.dnn_forward_trainable, or "
+        "serve.SparseDNNEngine(differentiable=True) which routes around "
+        "the fused path automatically)."
+    )
+
+
+fused_mlp_forward_nondiff.defvjp(_fused_fwd, _fused_bwd)

@@ -26,6 +26,15 @@ semiring zero, matching the oracle's masked semantics.
 Semirings: ``plus_times`` on the MXU; max/min-plus and max/min-min on
 the VPU via ``semiring_matmul._vpu_tile_product`` — same coverage as the
 ELL kernel.
+
+Autodiff: this module is the primal only. The ``plus_times`` form is
+made differentiable by the ``jax.custom_vjp`` rule in
+``repro.kernels.autodiff`` (attached at the ``repro.kernels.ops``
+wrapper); notably its backward dX = Wᵀ·dY re-enters THIS kernel on the
+device-side ``BlockCSRMatrix.transpose()`` (fully jittable — static
+``total_blocks``), so the backward pass also runs on the
+occupancy-exact grid. The weight cotangent lands only on stored blocks
+(invalid tail slots exactly zero). See docs/kernels.md.
 """
 
 from __future__ import annotations

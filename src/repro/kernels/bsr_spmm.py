@@ -15,6 +15,13 @@ grid = (row_blocks, n_tiles, max_blocks_per_row):
 
 Semirings: ``plus_times`` (MXU) and ``max_plus`` (VPU, chunked) — the two
 semirings of the paper's §III.
+
+Autodiff: this module is the primal only. The ``plus_times`` form is
+made differentiable by the ``jax.custom_vjp`` rule in
+``repro.kernels.autodiff`` (attached at the ``repro.kernels.ops``
+wrapper): dX = Wᵀ·dY via the occupancy-exact scatter-⊕ and a weight
+cotangent computed only at stored (mask-true) block slots — same ELL
+layout as the primal, padded slots exactly zero. See docs/kernels.md.
 """
 
 from __future__ import annotations

@@ -26,6 +26,13 @@ layers, residency wins on deep stacks — and dispatch picks per workload.
 
 plus_times only: the per-layer ReLU epilogue is the paper's max-plus
 step already fused in; other semirings take the layered path.
+
+Forward-only: per-layer activations never exist outside VMEM, so there
+is nothing to checkpoint for a backward pass — ``jax.grad`` through the
+``repro.kernels.ops`` wrapper raises ``NotImplementedError`` (rule in
+``repro.kernels.autodiff``) pointing at the layered differentiable path
+(``core.dnn.dnn_forward_trainable``); ``serve.SparseDNNEngine(
+differentiable=True)`` routes around this kernel automatically.
 """
 
 from __future__ import annotations

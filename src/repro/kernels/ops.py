@@ -13,6 +13,14 @@ makes that decision once.
 
 Wrappers also handle shape padding to the kernel block grid, so callers
 can pass arbitrary (m, k, n).
+
+Differentiability: for the arithmetic (``plus_times``) semiring the
+sparse wrappers route through the ``jax.custom_vjp`` rules of
+``repro.kernels.autodiff`` — ``jax.grad`` through ``bsr_spmm`` /
+``bcsr_spmm`` yields sparse-preserving weight cotangents (same layout as
+the primal, no densify) and ``Aᵀ·dY`` operand gradients. Other semirings
+keep the primal-only kernel path. ``fused_mlp_forward`` is NOT
+differentiable and says so if asked.
 """
 
 from __future__ import annotations
@@ -22,9 +30,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autodiff as _ad
 from repro.kernels import bcsr_spmm as _bcsr
 from repro.kernels import bsr_spmm as _bsr
-from repro.kernels import fused_mlp as _fmlp
 from repro.kernels import semiring_matmul as _smm
 from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
@@ -130,20 +138,31 @@ def bsr_spmm(
     block_n: int = 128,
     interpret: bool | None = None,
 ) -> Array:
-    """Padded, jit'd block-sparse ``C = A ⊕.⊗ B`` (+ fused epilogue)."""
+    """Padded, jit'd block-sparse ``C = A ⊕.⊗ B`` (+ fused epilogue).
+
+    Differentiable for ``plus_times`` (custom VJP: sparse-preserving
+    weight cotangent, occupancy-exact dX — see ``kernels.autodiff``).
+    """
     interpret = auto_interpret() if interpret is None else interpret
     n = b.shape[1]
     block_n = min(block_n, _ceil_mult(n))
     bp = _pad_to(b, 1, block_n)
-    out = _bsr.bsr_spmm(
-        a,
-        bp,
-        semiring_name=semiring_name,
-        bias=bias,
-        fuse_bias_relu=fuse_bias_relu,
-        block_n=block_n,
-        interpret=interpret,
-    )
+    if fuse_bias_relu and bias is None:
+        raise ValueError("fuse_bias_relu requires bias")
+    if semiring_name == "plus_times":
+        bias_arr = bias if bias is not None else jnp.zeros((a.shape[0],), jnp.float32)
+        cfg = _ad.SpmmConfig(fuse_bias_relu, block_n, interpret)
+        out = _ad.bsr_spmm_diff(cfg, a, bp, bias_arr)
+    else:
+        out = _bsr.bsr_spmm(
+            a,
+            bp,
+            semiring_name=semiring_name,
+            bias=bias,
+            fuse_bias_relu=fuse_bias_relu,
+            block_n=block_n,
+            interpret=interpret,
+        )
     return out[:, :n]
 
 
@@ -166,20 +185,31 @@ def bcsr_spmm(
     Grid steps ∝ stored nnz blocks (vs ``nrb × max_blocks_per_row`` for
     the ELL kernel). Block-rows with no stored blocks are filled with the
     epilogue of the semiring zero here (the kernel never visits them).
+
+    Differentiable for ``plus_times``: the custom VJP runs the backward
+    dX = Aᵀ·dY through this same Pallas kernel on the (jittable) block-
+    CSR transpose, and the weight cotangent lands only on stored blocks.
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = b.shape[1]
     block_n = min(block_n, _ceil_mult(n))
     bp = _pad_to(b, 1, block_n)
-    out = _bcsr.bcsr_spmm(
-        a,
-        bp,
-        semiring_name=semiring_name,
-        bias=bias,
-        fuse_bias_relu=fuse_bias_relu,
-        block_n=block_n,
-        interpret=interpret,
-    )[:, :n]
+    if fuse_bias_relu and bias is None:
+        raise ValueError("fuse_bias_relu requires bias")
+    if semiring_name == "plus_times":
+        bias_arr = bias if bias is not None else jnp.zeros((a.shape[0],), jnp.float32)
+        cfg = _ad.SpmmConfig(fuse_bias_relu, block_n, interpret)
+        out = _ad.bcsr_spmm_diff(cfg, a, bp, bias_arr)[:, :n]
+    else:
+        out = _bcsr.bcsr_spmm(
+            a,
+            bp,
+            semiring_name=semiring_name,
+            bias=bias,
+            fuse_bias_relu=fuse_bias_relu,
+            block_n=block_n,
+            interpret=interpret,
+        )[:, :n]
     # Empty block-rows: kernel grid never maps them — splice in the
     # epilogue of the accumulator init (semiring zero).
     fill = jnp.full((a.shape[0],), _semiring_zero(semiring_name), out.dtype)
@@ -206,12 +236,15 @@ def fused_mlp_forward(
     ``stacked_w``: BlockSparseMatrix whose leaves carry a leading L axis
     (see ``repro.core.dnn.stack_bsr``); square layers only. The
     activation panel never round-trips to HBM between layers.
+
+    NOT differentiable (per-layer activations never leave VMEM, so there
+    is nothing to checkpoint): ``jax.grad`` through this raises with a
+    pointer to the layered path (``dnn_forward_trainable``).
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = y0.shape[1]
     block_n = min(block_n, _ceil_mult(n))
     yp = _pad_to(y0, 1, block_n)
-    out = _fmlp.fused_mlp_forward(
-        stacked_w, stacked_b, yp, block_n=block_n, interpret=interpret
-    )
+    cfg = _ad.FusedMlpConfig(block_n, interpret)
+    out = _ad.fused_mlp_forward_nondiff(cfg, stacked_w, stacked_b, yp)
     return out[:, :n]

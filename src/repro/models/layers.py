@@ -38,7 +38,9 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
 # --- primitive ops --------------------------------------------------------
 
 
-def linear(w, x: Array, bias: Array | None = None) -> Array:
+def linear(
+    w, x: Array, bias: Array | None = None, *, use_kernel: bool | None = None
+) -> Array:
     """y = x @ W (+ b). ``w`` is dense (d_in, d_out) or sparse
     (d_out, d_in) — ELL-padded BSR for regular topologies, block-CSR for
     skewed/pruned ones (see ``repro.core.dnn.preferred_layout``).
@@ -46,15 +48,25 @@ def linear(w, x: Array, bias: Array | None = None) -> Array:
     Sparse weights store the *output-major* layout (as the paper's W
     matrices are applied ``W @ Y``), so they compute ``(W @ x^T)^T``
     through the block-sparse path.
+
+    ``use_kernel`` selects the Pallas kernel wrappers (custom-VJP
+    differentiable — ``repro.kernels.autodiff``) over the jnp oracle
+    paths; ``None`` auto-picks the kernels on TPU and the XLA paths
+    elsewhere (interpret-mode kernels are correctness-only). Both paths
+    are ``jax.grad``-compatible and sparse-preserving.
     """
     if isinstance(w, (BlockSparseMatrix, BlockCSRMatrix)):
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T  # (d_in, tokens)
-        matmul = (
-            sparse_ops.bcsr_matmul
-            if isinstance(w, BlockCSRMatrix)
-            else sparse_ops.bsr_matmul
-        )
+        is_csr = isinstance(w, BlockCSRMatrix)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+
+            matmul = kernel_ops.bcsr_spmm if is_csr else kernel_ops.bsr_spmm
+        else:
+            matmul = sparse_ops.bcsr_matmul if is_csr else sparse_ops.bsr_matmul
         out = matmul(w, xt)  # (d_out, tokens)
         y = out.T.reshape(*lead, w.shape[0])
     else:

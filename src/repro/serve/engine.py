@@ -93,19 +93,36 @@ class SparseDNNEngine:
     per layer — ``repro.core.dnn`` dispatch rules apply). ``infer``
     accepts (m, batch) activation panels of any batch size; batches are
     padded to ``batch_align`` so the jit cache stays warm across request
-    sizes.
+    sizes. ``differentiable=True`` guarantees the served forward is
+    ``jax.grad``-compatible (layered custom-VJP kernels only; the
+    VJP-less fused resident path is rejected/bypassed).
     """
 
     weights: Sequence[dnn.Weight]
     biases: Sequence[Array]
     batch_align: int = 64
     use_resident: bool | None = None  # None = auto-detect eligibility
+    # Differentiable serving (gradient-based attribution, fine-tuning
+    # against served traffic): the VMEM-resident fused kernel has NO VJP
+    # (activations never leave VMEM — nothing to checkpoint), so this
+    # flag forces the layered custom-VJP kernel path and REJECTS an
+    # explicit use_resident=True.
+    differentiable: bool = False
 
     def __post_init__(self):
         self.n_layers = len(self.weights)
         if len(self.biases) != self.n_layers:
             raise ValueError("weights/biases length mismatch")
-        resident_ok = dnn.resident_eligible(self.weights)
+        if self.differentiable and self.use_resident:
+            raise ValueError(
+                "use_resident=True is incompatible with differentiable="
+                "True: the fused VMEM-resident kernel has no VJP. Use "
+                "use_resident=None/False to route through the layered "
+                "kernel path, whose custom VJPs support jax.grad."
+            )
+        resident_ok = (
+            not self.differentiable and dnn.resident_eligible(self.weights)
+        )
         if self.use_resident and not resident_ok:
             raise ValueError(
                 "use_resident=True but the stack is not eligible for the "
@@ -125,18 +142,22 @@ class SparseDNNEngine:
 
     def _layered_kernel_forward(self, y: Array) -> Array:
         """Fallback: one fused kernel call per layer, dispatched on the
-        layer's weight layout (the real kernel path, not the jnp oracle)."""
+        layer's weight layout (the real kernel path, not the jnp oracle).
+
+        Sparse layers delegate to ``dnn.dnn_layer_trainable`` (the same
+        custom-VJP kernel wrappers). Dense layers split: the dense Pallas
+        kernel has no VJP, so differentiable=True takes the XLA fused
+        form instead — keeping the jax.grad-compatibility guarantee."""
         from repro.kernels import ops as kernel_ops
         from repro.sparse.bcsr import BlockCSRMatrix
         from repro.sparse.bsr import BlockSparseMatrix
 
         for w, b in zip(self.weights, self.biases):
-            if isinstance(w, BlockCSRMatrix):
-                y = kernel_ops.bcsr_spmm(w, y, b, fuse_bias_relu=True)
-            elif isinstance(w, BlockSparseMatrix):
-                y = kernel_ops.bsr_spmm(w, y, b, fuse_bias_relu=True)
-            else:
+            is_dense = not isinstance(w, (BlockCSRMatrix, BlockSparseMatrix))
+            if is_dense and not self.differentiable:
                 y = kernel_ops.semiring_matmul(w, y, b, fuse_bias_relu=True)
+            else:
+                y = dnn.dnn_layer_trainable(w, y, b)
         return y
 
     def infer(self, y0: Array) -> tuple[Array, dict]:
@@ -148,6 +169,7 @@ class SparseDNNEngine:
                 "batch": 0,
                 "padded_batch": 0,
                 "resident": self._resident,
+                "differentiable": self.differentiable,
                 "pallas_calls": 0,
                 "served_total": self._served,
             }
@@ -166,6 +188,7 @@ class SparseDNNEngine:
             "batch": batch,
             "padded_batch": batch + pad,
             "resident": self._resident,
+            "differentiable": self.differentiable,
             "pallas_calls": pallas_calls,
             "served_total": self._served,
         }

@@ -14,6 +14,13 @@ Two layouts, two oracles:
 
 On CPU these *are* the production paths (XLA fuses the gather + einsum
 well enough to show the paper's sparsity crossover — see benchmarks).
+
+The module also hosts the occupancy-exact building blocks of the custom
+VJPs (``repro.kernels.autodiff``): ``*_transpose_matmul`` computes
+``Aᵀ·Y`` by scatter-⊕ over the stored blocks (no transposed matrix, no
+densify) and ``*_weight_cotangent`` computes the sampled block products
+``dW[blk] = dZ_row(blk) · Bᵀ_col(blk)`` at stored positions only, so the
+weight gradient comes back in the primal's exact sparsity pattern.
 """
 
 from __future__ import annotations
@@ -151,6 +158,97 @@ def bcsr_matmul(
     empty = (a.row_ptr[1:] == a.row_ptr[:-1])[:, None, None]
     out = jnp.where(empty, zero, out)
     return out.reshape(m, k)
+
+
+def bsr_transpose_matmul(a: BlockSparseMatrix, y: Array) -> Array:
+    """``Aᵀ (k, m) @ Y (m, n)`` without materializing the transpose.
+
+    Each stored block (r, c, W) contributes ``Wᵀ @ Y_row(r)`` to output
+    row-block c: per-block products followed by a segment-sum keyed by
+    ``col_idx``. Work ∝ stored blocks — the backward-pass analogue of
+    ``bsr_matmul`` (used by the kernels' custom VJPs for dX = Wᵀ·dY).
+    """
+    m, k = a.shape
+    if y.shape[0] != m:
+        raise ValueError(f"shape mismatch: Aᵀ {(k, m)} @ Y {y.shape}")
+    n = y.shape[1]
+    bs_r, bs_c = a.block_shape
+    nrb, mbpr = a.col_idx.shape
+    ncb = a.n_col_blocks
+
+    y_panels = y.reshape(nrb, bs_r, n)
+    safe_blocks = jnp.where(a.block_mask[:, :, None, None], a.blocks, 0)
+    # prod[r, s] = W[r, s]ᵀ @ Y_row(r)   (bs_c, n) per stored block
+    prod = jnp.einsum(
+        "rsbc,rbn->rscn",
+        safe_blocks,
+        y_panels,
+        preferred_element_type=jnp.promote_types(a.dtype, y.dtype),
+    )
+    out = jax.ops.segment_sum(
+        prod.reshape(nrb * mbpr, bs_c, n),
+        a.col_idx.reshape(-1),
+        num_segments=ncb,
+    )
+    return out.reshape(k, n).astype(jnp.result_type(a.dtype, y.dtype))
+
+
+def bsr_weight_cotangent(a: BlockSparseMatrix, dz: Array, b: Array) -> Array:
+    """Cotangent of ``a.blocks`` for ``Z = A @ B``: the sampled products
+    ``dW[r, s] = dZ_row(r) @ B_col(col_idx[r, s])ᵀ`` — computed ONLY at
+    the stored (mask-true) slots; padded slots come back exactly zero so
+    the gradient lives in the primal's sparsity pattern."""
+    nrb, mbpr = a.col_idx.shape
+    bs_r, bs_c = a.block_shape
+    n = dz.shape[1]
+    dz_panels = dz.reshape(nrb, bs_r, n)
+    b_panels = b.reshape(a.n_col_blocks, bs_c, n)[a.col_idx]  # (nrb, mbpr, bs_c, n)
+    d = jnp.einsum(
+        "rbn,rscn->rsbc",
+        dz_panels,
+        b_panels,
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.where(a.block_mask[:, :, None, None], d, 0.0)
+
+
+def bcsr_transpose_matmul(c: BlockCSRMatrix, y: Array) -> Array:
+    """``Aᵀ (k, m) @ Y (m, n)`` for the flattened CSR layout — per-stored-
+    block ``Wᵀ @ Y_row`` products scatter-summed by ``col_idx`` (unsorted
+    segment ids; work ∝ true nnz). jnp mirror of running ``bcsr_spmm`` on
+    ``c.transpose()`` — the oracle for the CSR kernel's backward pass."""
+    m, k = c.shape
+    if y.shape[0] != m:
+        raise ValueError(f"shape mismatch: Aᵀ {(k, m)} @ Y {y.shape}")
+    n = y.shape[1]
+    bs_r, bs_c = c.block_shape
+    y_gathered = y.reshape(c.n_row_blocks, bs_r, n)[c.row_id]  # (T, bs_r, n)
+    safe = jnp.where(c.valid[:, None, None], c.values, 0)
+    prod = jnp.einsum(
+        "tbc,tbn->tcn",
+        safe,
+        y_gathered,
+        preferred_element_type=jnp.promote_types(c.dtype, y.dtype),
+    )
+    out = jax.ops.segment_sum(prod, c.col_idx, num_segments=c.n_col_blocks)
+    return out.reshape(k, n).astype(jnp.result_type(c.dtype, y.dtype))
+
+
+def bcsr_weight_cotangent(c: BlockCSRMatrix, dz: Array, b: Array) -> Array:
+    """Cotangent of ``c.values`` for ``Z = A @ B``: sampled products
+    ``dW[t] = dZ_row(row_id[t]) @ B_col(col_idx[t])ᵀ`` at stored blocks
+    only; invalid tail slots come back exactly zero."""
+    bs_r, bs_c = c.block_shape
+    n = dz.shape[1]
+    dz_gathered = dz.reshape(c.n_row_blocks, bs_r, n)[c.row_id]  # (T, bs_r, n)
+    b_gathered = b.reshape(c.n_col_blocks, bs_c, n)[c.col_idx]  # (T, bs_c, n)
+    d = jnp.einsum(
+        "tbn,tcn->tbc",
+        dz_gathered,
+        b_gathered,
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.where(c.valid[:, None, None], d, 0.0)
 
 
 def bcsr_matmul_fused_relu(

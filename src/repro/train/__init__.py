@@ -1,2 +1,7 @@
 from repro.train.optimizer import adamw, sgd  # noqa: F401
+from repro.train.sparse import (  # noqa: F401
+    SparseMLPState,
+    init_sparse_mlp_state,
+    make_sparse_train_step,
+)
 from repro.train.trainer import TrainState, make_train_step  # noqa: F401

@@ -119,6 +119,10 @@ def sgd(lr: float | Callable, *, momentum: float = 0.9) -> Optimizer:
         lr_t = lr_fn(step)
 
         def upd(g, m, p):
+            # non-float params (sparse-layout topology leaves) are frozen;
+            # their cotangents are float0 and must not be cast or applied.
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                return p, m
             m = momentum * m + g.astype(m.dtype)
             return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
 

@@ -1,0 +1,41 @@
+"""Execute the README's ```python code fences (the CI docs job).
+
+Fences share one namespace and run top-to-bottom, so the README can
+build up an example across fences. A fence whose first line is
+``# docs: no-run`` is skipped (for illustrative fragments). Exits
+nonzero on the first broken fence — a README whose quickstart doesn't
+run is a bug.
+
+Run from the repo root: PYTHONPATH=src python tools/check_readme.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+README = pathlib.Path(__file__).resolve().parent.parent / "README.md"
+
+
+def main() -> int:
+    text = README.read_text()
+    fences = re.findall(r"```python\n(.*?)```", text, re.S)
+    if not fences:
+        print("error: README.md has no ```python fences to check", file=sys.stderr)
+        return 1
+    ns: dict = {}
+    ran = 0
+    for i, code in enumerate(fences, 1):
+        if code.lstrip().startswith("# docs: no-run"):
+            print(f"-- fence {i}/{len(fences)}: skipped (no-run) --")
+            continue
+        print(f"-- fence {i}/{len(fences)} --", flush=True)
+        exec(compile(code, f"README.md#fence{i}", "exec"), ns)
+        ran += 1
+    print(f"README OK: {ran}/{len(fences)} python fences executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
