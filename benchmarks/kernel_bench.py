@@ -26,9 +26,18 @@ track the trajectory:
           counts per step (forward kernels + the CSR backward-dX
           kernel), forward/backward grid-step accounting, and the loss
           trajectory proving the sparse stack actually learns.
+  serve:  the SERVING arm — a deterministic bursty (Poisson-ish)
+          100-request arrival trace served twice over the same weights:
+          static aligned batching (one right-padded ``infer`` per tick)
+          vs the continuous batcher (``repro.serve.scheduler``), with
+          pad-slot fraction, exact grid-step totals, and latency for
+          both. Identical in --quick and full runs so the CI gate
+          (``tools/check_bench.py``) always compares like with like.
 
 See ``docs/benchmarks.md`` for the full field reference and how CI's
-benchmark smoke job consumes this file.
+benchmark smoke job consumes this file; ``tools/check_bench.py`` fails
+CI when grid-step counts drift from ``benchmarks/baselines/`` or the
+serve arm's pad waste regresses.
 """
 
 from __future__ import annotations
@@ -243,6 +252,90 @@ def train_arm(m: int, L: int, block: int, bpr: int, n: int, steps: int):
     }
 
 
+def serve_arm(
+    m: int,
+    L: int,
+    bpr: int,
+    n_requests: int,
+    batch_size: int,
+    tile_align: int,
+    lam: float,
+    burst_every: int,
+    burst_size: int,
+    seed: int,
+    min_fill: float,
+    max_wait: int,
+):
+    """Static aligned batching vs continuous batching on one trace.
+
+    Same weights, same deterministic arrival stream; the only variable
+    is the batching policy. Grid-step totals are exact (the pad rides
+    through every layer's kernel grid), wall-clock is indicative only
+    (interpret-mode kernels off-TPU). The comparison protocol itself
+    lives in ``repro.serve.compare_static_continuous`` — this arm only
+    parameterizes it and packages the JSON.
+    """
+    from repro.serve import (
+        SparseDNNEngine,
+        compare_static_continuous,
+        poissonish_trace,
+    )
+
+    ws = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(400 + i), (m, m), (16, 16), blocks_per_row=bpr
+        )
+        for i in range(L)
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+    assert dnn.resident_eligible(ws), "serve arm expects the resident path"
+
+    trace = poissonish_trace(
+        n_requests,
+        m=m,
+        lam=lam,
+        burst_every=burst_every,
+        burst_size=burst_size,
+        seed=seed,
+    )
+    cmp = compare_static_continuous(
+        lambda align: SparseDNNEngine(ws, bs, batch_align=align),
+        trace,
+        batch_size=batch_size,
+        tile_align=tile_align,
+        min_fill=min_fill,
+        max_wait=max_wait,
+    )
+    static, continuous = cmp["static"], cmp["continuous"]
+    resident_used = all(s.resident for s in continuous.steps)
+    return {
+        "m": m,
+        "layers": L,
+        "blocks_per_row": bpr,
+        "requests": n_requests,
+        "batch_size": batch_size,
+        "tile_align": tile_align,
+        "min_fill": min_fill,
+        "max_wait": max_wait,
+        "trace": {
+            "lam": lam,
+            "burst_every": burst_every,
+            "burst_size": burst_size,
+            "seed": seed,
+            "ticks": len(trace),
+            "arrivals_per_tick": [len(a) for a in trace],
+        },
+        "resident_path_used": resident_used,
+        "static": static.summary(),
+        "continuous": continuous.summary(),
+        "pad_fraction_ratio_continuous_over_static": cmp[
+            "pad_fraction_ratio"
+        ],
+        "grid_steps_ratio_continuous_over_static": cmp["grid_steps_ratio"],
+        "wall_time_s": cmp["wall_time_s"],
+    }
+
+
 def run(quick: bool = False):
     n = 64
     sizes = [256] if quick else [256, 512, 1024]
@@ -293,6 +386,34 @@ def run(quick: bool = False):
         flush=True,
     )
 
+    # Serving arm: SAME trace + knobs in quick and full runs, so the CI
+    # gate's baseline comparison is always like-for-like.
+    serve = serve_arm(
+        m=64,
+        L=3,
+        bpr=2,
+        n_requests=100,
+        batch_size=32,
+        tile_align=8,
+        lam=3.0,
+        burst_every=8,
+        burst_size=12,
+        seed=7,
+        min_fill=0.25,
+        max_wait=3,
+    )
+    print(
+        f"serve: {serve['requests']} reqs over {serve['trace']['ticks']} "
+        f"ticks  pad-frac static={serve['static']['pad_slot_fraction']:.3f} "
+        f"continuous={serve['continuous']['pad_slot_fraction']:.3f}  "
+        f"grid steps {serve['static']['grid_steps_total']}"
+        f"→{serve['continuous']['grid_steps_total']}  "
+        f"latency p50/max "
+        f"{serve['continuous']['latency_p50']:.0f}/"
+        f"{serve['continuous']['latency_max']} ticks",
+        flush=True,
+    )
+
     # The tentpole invariants, asserted on every benchmark run:
     for r in topologies:
         if r["max_blocks_per_row"] > r["mean_blocks_per_row"]:
@@ -303,13 +424,29 @@ def run(quick: bool = False):
     assert train["loss_decreased"], train["losses"]
     assert train["weight_cotangent_pattern_preserved"]
     assert train["pallas_calls_per_step"] > train["pallas_calls_forward_only"]
+    # serving arm: every request served, the resident path engaged, and
+    # continuous batching strictly beats static aligned batching on pad
+    # waste AND total kernel grid steps for the same trace
+    assert serve["static"]["requests"] == serve["requests"]
+    assert serve["continuous"]["requests"] == serve["requests"]
+    assert serve["resident_path_used"]
+    assert (
+        serve["continuous"]["pad_slot_fraction"]
+        < serve["static"]["pad_slot_fraction"]
+    ), serve
+    assert (
+        serve["continuous"]["grid_steps_total"]
+        < serve["static"]["grid_steps_total"]
+    ), serve
 
     payload = {
         "backend": jax.default_backend(),
         "interpret_kernels": kernel_ops.auto_interpret(),
+        "quick": quick,
         "topologies": topologies,
         "fused": fused,
         "train": train,
+        "serve": serve,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

@@ -1,0 +1,132 @@
+"""Streaming-inference demo: continuous batching vs static batching.
+
+Builds the paper's deep sparse ReLU MLP, replays a deterministic bursty
+(Poisson-ish) request stream through it twice over the same weights —
+
+  1. **static aligned batching** — the pre-scheduler setup: every tick's
+     arrivals are served immediately as one right-padded batch at a
+     fixed service width (``SparseDNNEngine.infer``);
+  2. **continuous batching** — ``repro.serve.ContinuousBatcher`` packs
+     pending requests into tile-aligned panels each scheduling tick
+     (late arrivals join mid-stream, completed requests free their
+     slots), driving the engine's ``submit``/``step``/``drain`` API —
+
+and prints the head-to-head ServeStats: pad-slot fraction, exact kernel
+grid steps per served row, and the latency distribution. The grid-step
+columns are hardware-independent: the pad columns of every underfull
+static batch ride through all L layers' kernel grids, which is exactly
+the work the scheduler removes.
+
+Run: PYTHONPATH=src python examples/serve_stream.py [--quick]
+Docs: docs/serving.md (design), docs/benchmarks.md (serve arm fields).
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dnn
+from repro.serve import (
+    ContinuousBatcher,
+    SparseDNNEngine,
+    poissonish_trace,
+    serve_trace_static,
+)
+from repro.sparse.bsr import BlockSparseMatrix
+
+
+def build_stack(m: int, layers: int, bpr: int):
+    ws = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(i), (m, m), (16, 16), blocks_per_row=bpr
+        )
+        for i in range(layers)
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(layers)]
+    return ws, bs
+
+
+def report(tag: str, s) -> None:
+    print(
+        f"  {tag:11s} steps={s.engine_steps:3d}  rows={s.rows_served:3d}  "
+        f"padded_slots={s.padded_slots:4d}  pad_frac={s.pad_slot_fraction:.3f}  "
+        f"grid_steps={s.grid_steps_total:5d} "
+        f"({s.grid_steps_per_row:.2f}/row)  "
+        f"latency p50/mean/max = {s.latency_p50:.0f}/{s.latency_mean:.2f}/"
+        f"{s.latency_max}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--blocks-per-row", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--tile-align", type=int, default=8)
+    ap.add_argument("--lam", type=float, default=3.0)
+    ap.add_argument("--min-fill", type=float, default=0.25)
+    ap.add_argument("--max-wait", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument(
+        "--quick", action="store_true", help="small shapes for CI (seconds)"
+    )
+    args = ap.parse_args()
+    if args.quick:
+        args.m, args.layers, args.requests = 32, 2, 30
+
+    ws, bs = build_stack(args.m, args.layers, args.blocks_per_row)
+    trace = poissonish_trace(
+        args.requests,
+        m=args.m,
+        lam=args.lam,
+        burst_every=8,
+        burst_size=12,
+        seed=args.seed,
+    )
+    counts = [len(a) for a in trace]
+    print(
+        f"== serving {args.requests} requests over {len(trace)} ticks "
+        f"(λ≈{args.lam}, bursts of 12 every 8 ticks) through "
+        f"{args.layers}L of {args.m}² sparse MLP =="
+    )
+    print(f"arrivals/tick: {counts}")
+
+    static = serve_trace_static(
+        SparseDNNEngine(ws, bs, batch_align=args.batch_size), trace
+    )
+    batcher = ContinuousBatcher(
+        SparseDNNEngine(ws, bs, batch_align=args.tile_align),
+        batch_size=args.batch_size,
+        min_fill=args.min_fill,
+        max_wait=args.max_wait,
+    )
+    continuous = batcher.run_trace(trace)
+
+    print("\nhead-to-head (same weights, same trace):")
+    report("static", static)
+    report("continuous", continuous)
+    saved = static.grid_steps_total - continuous.grid_steps_total
+    print(
+        f"\ncontinuous batching removed {saved} of "
+        f"{static.grid_steps_total} kernel grid steps "
+        f"({saved / static.grid_steps_total:.1%}) at a latency cost of "
+        f"{continuous.latency_mean - static.latency_mean:.2f} ticks mean."
+    )
+
+    # spot-check: the batcher's per-request outputs are the real forward
+    ref = dnn.dnn_forward(ws, bs, trace[0][0][:, None], fused=True)[:, 0]
+    np.testing.assert_allclose(
+        np.asarray(batcher.result(0)), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+    assert continuous.requests == static.requests == args.requests
+    assert continuous.pad_slot_fraction < static.pad_slot_fraction
+    print("[check] request 0 output matches the reference forward; "
+          "pad waste strictly improved")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,3 +3,13 @@ from repro.serve.engine import (  # noqa: F401
     SparseDNNEngine,
     cache_nbytes,
 )
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousBatcher,
+    Request,
+    RequestQueue,
+    ServeStats,
+    StepRecord,
+    compare_static_continuous,
+    poissonish_trace,
+    serve_trace_static,
+)

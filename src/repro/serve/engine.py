@@ -15,6 +15,20 @@ kernel tile, dispatches the VMEM-resident single-``pallas_call`` forward
 when the stack qualifies (square, homogeneous, panel fits VMEM) and the
 layered fused path otherwise, and reports per-batch kernel-step
 accounting so operators can see the nnz-proportional scaling live.
+
+Two call conventions on ``SparseDNNEngine``:
+
+* **one-shot** — ``infer(y0)``: one aligned right-padded batch per call
+  (the original API, now a thin wrapper over the step API);
+* **step-level** — ``submit(cols)`` stages feature columns,
+  ``step(limit=...)`` dispatches one padded panel over what is staged,
+  ``drain()`` steps until the stage is empty. This is the surface
+  ``repro.serve.scheduler.ContinuousBatcher`` drives: it decides *what*
+  to stage each scheduling tick (admission, priorities, deadlines,
+  mid-flight joins) while the engine stays the only component that
+  touches kernels. Step stats carry exact grid-step accounting
+  (``repro.core.dnn.dnn_grid_steps``) so pad waste is visible as
+  hardware-independent kernel steps, not just wall-clock.
 """
 
 from __future__ import annotations
@@ -139,6 +153,14 @@ class SparseDNNEngine:
             self._stacked_w = dnn.stack_bsr(list(self.weights))
             self._stacked_b = jnp.stack(list(self.biases))
         self._served = 0
+        self._steps = 0
+        self._next_rid = 0
+        # Staged work is kept as contiguous (request_ids, panel) chunks —
+        # a chunk is only split when a step's limit lands inside it, so
+        # the one-shot infer path stays a single pad on the caller's
+        # array with no per-column slicing.
+        self._staged: list[tuple[list, Array]] = []
+        self._staged_count = 0
 
     def _layered_kernel_forward(self, y: Array) -> Array:
         """Fallback: one fused kernel call per layer, dispatched on the
@@ -160,21 +182,94 @@ class SparseDNNEngine:
                 y = dnn.dnn_layer_trainable(w, y, b)
         return y
 
-    def infer(self, y0: Array) -> tuple[Array, dict]:
-        """y0: (m, batch) feature columns → (Y[L], stats)."""
-        m, batch = y0.shape
+    # ------------------------------------------------------------------
+    # step-level API (driven by serve.scheduler.ContinuousBatcher)
+    # ------------------------------------------------------------------
+
+    @property
+    def staged(self) -> int:
+        """Feature columns submitted but not yet dispatched."""
+        return self._staged_count
+
+    @property
+    def staged_request_ids(self) -> list:
+        return [rid for rids, _ in self._staged for rid in rids]
+
+    def submit(
+        self, cols: Array, request_ids: Sequence[Any] | None = None
+    ) -> list:
+        """Stage (m, k) feature columns for the next ``step``.
+
+        Returns the request ids assigned to the k columns (monotonic
+        ints unless the caller names them). Staging is pure bookkeeping
+        — no kernel work happens until ``step``.
+        """
+        m, k = cols.shape
+        if request_ids is None:
+            request_ids = list(range(self._next_rid, self._next_rid + k))
+            self._next_rid += k
+        elif len(request_ids) != k:
+            raise ValueError(
+                f"{len(request_ids)} request ids for {k} columns"
+            )
+        if k:
+            self._staged.append((list(request_ids), cols))
+            self._staged_count += k
+        return list(request_ids)
+
+    def _idle_stats(self) -> dict:
+        return {
+            "batch": 0,
+            "padded_batch": 0,
+            "pad_slots": 0,
+            "grid_steps": 0,
+            "request_ids": [],
+            "resident": self._resident,
+            "differentiable": self.differentiable,
+            "pallas_calls": 0,
+            "served_total": self._served,
+            "engine_steps": self._steps,
+        }
+
+    def step(self, limit: int | None = None) -> tuple[Array | None, dict]:
+        """Dispatch ONE padded forward pass over up to ``limit`` staged
+        columns (FIFO). Returns ``(Y[L] (m, batch), stats)``; stats carry
+        the exact grid-step bill for the padded panel, so idle pad slots
+        are visible as kernel steps. ``(None, stats)`` when nothing is
+        staged.
+        """
+        if limit is not None and limit < 1:
+            raise ValueError(f"step limit must be >= 1, got {limit}")
+        batch = (
+            self._staged_count
+            if limit is None
+            else min(limit, self._staged_count)
+        )
         pallas_calls = 1 if self._resident else self.n_layers
         if batch == 0:
-            return y0, {
-                "batch": 0,
-                "padded_batch": 0,
-                "resident": self._resident,
-                "differentiable": self.differentiable,
-                "pallas_calls": 0,
-                "served_total": self._served,
-            }
+            return None, self._idle_stats()
+        need = batch
+        take: list[tuple[list, Array]] = []
+        while need:
+            rids, arr = self._staged[0]
+            k = arr.shape[1]
+            if k <= need:
+                take.append(self._staged.pop(0))
+                need -= k
+            else:  # split the chunk at the step boundary
+                take.append((rids[:need], arr[:, :need]))
+                self._staged[0] = (rids[need:], arr[:, need:])
+                need = 0
+        self._staged_count -= batch
+        ids = [rid for rids, _ in take for rid in rids]
         pad = (-batch) % self.batch_align
-        yp = jnp.pad(y0, ((0, 0), (0, pad))) if pad else y0
+        yp = (
+            take[0][1]
+            if len(take) == 1
+            else jnp.concatenate([arr for _, arr in take], axis=1)
+        )
+        if pad:
+            yp = jnp.pad(yp, ((0, 0), (0, pad)))
         if self._resident:
             from repro.kernels import ops as kernel_ops
 
@@ -184,15 +279,45 @@ class SparseDNNEngine:
         else:
             out = self._layered_kernel_forward(yp)
         self._served += batch
+        self._steps += 1
         stats = {
             "batch": batch,
             "padded_batch": batch + pad,
+            "pad_slots": pad,
+            "grid_steps": dnn.dnn_grid_steps(self.weights, batch + pad),
+            "request_ids": ids,
             "resident": self._resident,
             "differentiable": self.differentiable,
             "pallas_calls": pallas_calls,
             "served_total": self._served,
+            "engine_steps": self._steps,
         }
         return out[:, :batch], stats
+
+    def drain(self, limit: int | None = None) -> list[tuple[Array, dict]]:
+        """Step until the stage is empty (≤ ``limit`` columns per step)."""
+        results = []
+        while self._staged:
+            results.append(self.step(limit))
+        return results
+
+    def infer(self, y0: Array) -> tuple[Array, dict]:
+        """One-shot API: y0 (m, batch) feature columns → (Y[L], stats).
+
+        A thin wrapper over ``submit`` + ``step`` — one aligned,
+        right-padded batch per call, exactly the pre-scheduler contract.
+        """
+        m, batch = y0.shape
+        if batch == 0:
+            return y0, self._idle_stats()
+        if self._staged:
+            raise RuntimeError(
+                "infer() on an engine with staged columns would reorder "
+                "them past the step API's FIFO; call drain() first"
+            )
+        self.submit(y0)
+        out, stats = self.step()
+        return out, stats
 
 
 def make_serve_fns(model: Model):

@@ -1,0 +1,293 @@
+"""CI perf-regression gate over ``BENCH_kernels.json``.
+
+Compares a fresh benchmark artifact against the committed baseline
+(``benchmarks/baselines/BENCH_kernels.baseline.json``) and FAILS the job
+with a readable diff table instead of merely uploading the artifact.
+
+Three classes of check, matched to what each field can promise:
+
+* **exact** — grid-step counts, pallas_call counts, layouts, and the
+  serve arm's deterministic accounting (rows, padded slots, engine
+  steps, latency). These are hardware-independent architecture truth:
+  any drift is a real behaviour change and fails the gate.
+* **tolerant** — wall-clock fields. Runner noise dominates, so the gate
+  only rejects order-of-magnitude blowups (``--tol``, default 25x).
+* **non-regression** — the serve arm's continuous-batching pad-slot
+  fraction must not exceed the baseline's, and must stay strictly below
+  the static arm's (the whole point of the scheduler).
+
+Sections whose generator parameters differ from the baseline (e.g. a
+full run compared against the quick baseline) are reported as SKIP, not
+failed — the gate only compares like with like. Baseline topologies must
+all be present in the fresh artifact (the quick grid is a subset of the
+full grid).
+
+Run from the repo root:
+  PYTHONPATH=src python -m benchmarks.kernel_bench --quick
+  python tools/check_bench.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_FRESH = REPO_ROOT / "BENCH_kernels.json"
+DEFAULT_BASELINE = (
+    REPO_ROOT / "benchmarks" / "baselines" / "BENCH_kernels.baseline.json"
+)
+
+# Per-section generator parameters: a section is only compared when ALL
+# of these match between baseline and fresh artifact.
+PARAMS = {
+    "fused": ("m", "layers", "blocks_per_row", "n"),
+    "train": ("m", "layers", "block", "blocks_per_row", "n"),
+    "serve": (
+        "m",
+        "layers",
+        "blocks_per_row",
+        "requests",
+        "batch_size",
+        "tile_align",
+        "min_fill",
+        "max_wait",
+        "trace",
+    ),
+}
+
+EXACT = {
+    "fused": (
+        "pallas_calls_fused",
+        "pallas_calls_layered",
+        "hbm_activation_roundtrips_eliminated",
+    ),
+    "train": (
+        "pallas_calls_per_step",
+        "pallas_calls_forward_only",
+        "grid_steps_forward",
+        "grid_steps_backward_kernel",
+        "layout_per_layer",
+        "weight_cotangent_pattern_preserved",
+        "loss_decreased",
+    ),
+}
+TOPOLOGY_EXACT = (
+    "grid_steps_ell",
+    "grid_steps_csr",
+    "max_blocks_per_row",
+    "mean_blocks_per_row",
+)
+# Deterministic serve accounting, checked exactly for BOTH arms.
+SERVE_EXACT = (
+    "requests",
+    "engine_steps",
+    "rows_served",
+    "padded_slots",
+    "grid_steps_total",
+    "latency_mean",
+    "latency_p50",
+    "latency_max",
+    "deadline_misses",
+)
+
+
+class Gate:
+    def __init__(self, tol: float):
+        self.tol = tol
+        self.rows: list[tuple[str, str, str, str, str]] = []
+        self.failed = 0
+
+    def _add(self, section, field, base, fresh, verdict):
+        self.rows.append(
+            (section, field, _fmt(base), _fmt(fresh), verdict)
+        )
+        if verdict == "FAIL":
+            self.failed += 1
+
+    def exact(self, section, field, base, fresh):
+        ok = (
+            math.isclose(base, fresh, rel_tol=1e-9, abs_tol=1e-12)
+            if isinstance(base, float) or isinstance(fresh, float)
+            else base == fresh
+        )
+        self._add(section, field, base, fresh, "ok" if ok else "FAIL")
+
+    def time(self, section, field, base, fresh):
+        ok = fresh <= base * self.tol
+        self._add(
+            section, field, base, fresh, "ok" if ok else "FAIL"
+        )
+
+    def no_worse(self, section, field, base, fresh, eps=1e-9):
+        ok = fresh <= base + eps
+        self._add(section, field, base, fresh, "ok" if ok else "FAIL")
+
+    def skip(self, section, reason):
+        self.rows.append((section, reason, "-", "-", "SKIP"))
+
+    def missing(self, section, what):
+        self._add(section, what, "present", "missing", "FAIL")
+
+    def table(self) -> str:
+        header = ("section", "field", "baseline", "fresh", "verdict")
+        rows = [header, *self.rows]
+        widths = [max(len(r[i]) for r in rows) for i in range(5)]
+        lines = []
+        for j, r in enumerate(rows):
+            lines.append(
+                "  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+            )
+            if j == 0:
+                lines.append("  ".join("-" * w for w in widths))
+        return "\n".join(lines)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    s = str(v)
+    return s if len(s) <= 32 else s[:29] + "..."
+
+
+def _topo_key(t: dict) -> tuple:
+    return (t["m"], t["block"], t["n"], t["nnz_blocks"], t["skew"])
+
+
+def _params_match(section: str, base: dict, fresh: dict) -> bool:
+    return all(base.get(k) == fresh.get(k) for k in PARAMS[section])
+
+
+def check(baseline: dict, fresh: dict, tol: float) -> Gate:
+    gate = Gate(tol)
+
+    # --- topologies: every baseline topology must appear, steps exact --
+    fresh_topos = {_topo_key(t): t for t in fresh.get("topologies", [])}
+    for bt in baseline.get("topologies", []):
+        key = _topo_key(bt)
+        name = f"topo m={key[0]} nnz={key[3]} skew={key[4]}"
+        ft = fresh_topos.get(key)
+        if ft is None:
+            gate.missing(name, "topology")
+            continue
+        for field in TOPOLOGY_EXACT:
+            gate.exact(name, field, bt[field], ft[field])
+        for arm in ("ell", "csr", "dense"):
+            gate.time(
+                name,
+                f"xla_time_s.{arm}",
+                bt["xla_time_s"][arm],
+                ft["xla_time_s"][arm],
+            )
+
+    # --- fused / train: exact counts when the generator params match ---
+    for section in ("fused", "train"):
+        bs, fs = baseline.get(section), fresh.get(section)
+        if bs is None:
+            continue
+        if fs is None:
+            gate.missing(section, "section")
+            continue
+        if not _params_match(section, bs, fs):
+            gate.skip(section, "generator params differ (quick vs full)")
+            continue
+        for field in EXACT[section]:
+            gate.exact(section, field, bs[field], fs[field])
+        for field, bt in bs.get("xla_time_s", {}).items():
+            gate.time(section, f"xla_time_s.{field}", bt, fs["xla_time_s"][field])
+
+    # --- serve: deterministic accounting exact, pad waste gated -------
+    bs, fs = baseline.get("serve"), fresh.get("serve")
+    if bs is not None:
+        if fs is None:
+            gate.missing("serve", "section")
+        elif not _params_match("serve", bs, fs):
+            gate.skip("serve", "trace/knobs differ from baseline")
+        else:
+            gate.exact(
+                "serve", "resident_path_used",
+                bs["resident_path_used"], fs["resident_path_used"],
+            )
+            for arm in ("static", "continuous"):
+                for field in SERVE_EXACT:
+                    gate.exact(
+                        f"serve.{arm}", field, bs[arm][field], fs[arm][field]
+                    )
+            # the headline guarantee: pad waste must not regress vs the
+            # baseline, and continuous must still beat static outright
+            gate.no_worse(
+                "serve",
+                "continuous.pad_slot_fraction",
+                bs["continuous"]["pad_slot_fraction"],
+                fs["continuous"]["pad_slot_fraction"],
+            )
+            strict = (
+                fs["continuous"]["pad_slot_fraction"]
+                < fs["static"]["pad_slot_fraction"]
+            )
+            gate._add(
+                "serve",
+                "continuous < static pad fraction",
+                fs["static"]["pad_slot_fraction"],
+                fs["continuous"]["pad_slot_fraction"],
+                "ok" if strict else "FAIL",
+            )
+            for arm in ("static", "continuous"):
+                gate.time(
+                    "serve",
+                    f"wall_time_s.{arm}",
+                    bs["wall_time_s"][arm],
+                    fs["wall_time_s"][arm],
+                )
+    return gate
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="?", default=str(DEFAULT_FRESH))
+    ap.add_argument("baseline", nargs="?", default=str(DEFAULT_BASELINE))
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=25.0,
+        help="wall-clock regression factor tolerated (runner noise)",
+    )
+    args = ap.parse_args()
+
+    try:
+        fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    except FileNotFoundError:
+        print(
+            f"error: fresh artifact {args.fresh} not found — run "
+            "`PYTHONPATH=src python -m benchmarks.kernel_bench --quick` first",
+            file=sys.stderr,
+        )
+        return 2
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+
+    gate = check(baseline, fresh, args.tol)
+    print(gate.table())
+    n_checks = sum(1 for r in gate.rows if r[4] != "SKIP")
+    if gate.failed:
+        print(
+            f"\nbench gate: {gate.failed}/{n_checks} checks FAILED against "
+            f"{args.baseline}",
+            file=sys.stderr,
+        )
+        print(
+            "If the change is intentional (new kernel schedule, new "
+            "trace), regenerate the baseline:\n"
+            "  PYTHONPATH=src python -m benchmarks.kernel_bench --quick\n"
+            f"  cp {DEFAULT_FRESH.name} {args.baseline}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\nbench gate: all {n_checks} checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,19 +6,33 @@ build up an example across fences. A fence whose first line is
 nonzero on the first broken fence — a README whose quickstart doesn't
 run is a bug.
 
+``--examples`` additionally executes the quick-mode example scripts
+listed in :data:`QUICK_EXAMPLES` as subprocesses (same interpreter,
+``PYTHONPATH=src`` inherited), so the documented quickstarts cannot rot
+either.
+
 Run from the repo root: PYTHONPATH=src python tools/check_readme.py
 """
 
 from __future__ import annotations
 
+import argparse
 import pathlib
 import re
+import subprocess
 import sys
 
-README = pathlib.Path(__file__).resolve().parent.parent / "README.md"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = REPO_ROOT / "README.md"
+
+# Example scripts with a fast deterministic mode, run by the CI docs job
+# (script path relative to the repo root, plus its quick-mode args).
+QUICK_EXAMPLES = [
+    ("examples/serve_stream.py", ["--quick"]),
+]
 
 
-def main() -> int:
+def run_fences() -> int:
     text = README.read_text()
     fences = re.findall(r"```python\n(.*?)```", text, re.S)
     if not fences:
@@ -35,6 +49,34 @@ def main() -> int:
         ran += 1
     print(f"README OK: {ran}/{len(fences)} python fences executed")
     return 0
+
+
+def run_examples() -> int:
+    for script, args in QUICK_EXAMPLES:
+        cmd = [sys.executable, str(REPO_ROOT / script), *args]
+        print(f"-- example: {script} {' '.join(args)} --", flush=True)
+        r = subprocess.run(cmd, cwd=REPO_ROOT)
+        if r.returncode != 0:
+            print(
+                f"error: {script} exited {r.returncode}", file=sys.stderr
+            )
+            return r.returncode
+    print(f"examples OK: {len(QUICK_EXAMPLES)} quick-mode scripts executed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--examples",
+        action="store_true",
+        help="also run the quick-mode example scripts",
+    )
+    args = ap.parse_args()
+    rc = run_fences()
+    if rc == 0 and args.examples:
+        rc = run_examples()
+    return rc
 
 
 if __name__ == "__main__":
