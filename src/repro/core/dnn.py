@@ -25,6 +25,12 @@ entry point dispatches on the weight type. ``dnn_forward_scan`` is the
 stacked/scanned variant used inside jit for deep networks (one layer
 traced once).
 
+Dispatch itself now lives in ``repro.plan`` (layout heuristic, route
+decision tree, grid-step cost model, compiled-plan cache — see
+``docs/architecture.md``); this module keeps the paper-faithful math
+plus backward-compatible wrappers that consult plans instead of
+re-deriving dispatch per call.
+
 Training: ``dnn_forward_trainable`` is the ``value_and_grad``-compatible
 forward — every sparse layer goes through the custom-VJP Pallas kernel
 wrappers (``repro.kernels.ops``), so the backward pass computes
@@ -50,71 +56,56 @@ from repro.sparse.bsr import BlockSparseMatrix
 Array = jax.Array
 Weight = Union[Array, BlockSparseMatrix, BlockCSRMatrix]
 
-# A block-row whose ELL pad wastes more than this fraction of its slots
-# (1 - nnz / (nrb·mbpr)) is better served by the occupancy-exact grid.
-ELL_WASTE_THRESHOLD = 0.25
+# Backward-compatible wrappers — the layout heuristic, grid-step cost
+# model, and route decision tree now live in ``repro.plan`` so plans,
+# serving, and these legacy entry points all consult ONE implementation.
+# ``repro.plan`` imports are deferred to call time: this module is
+# imported during ``repro.core``/``repro.sparse`` package init, before
+# the plan package can finish loading.
+
+
+def __getattr__(name: str):
+    if name == "ELL_WASTE_THRESHOLD":
+        from repro.plan import layout as _plan_layout
+
+        return _plan_layout.ELL_WASTE_THRESHOLD
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def preferred_layout(w: BlockSparseMatrix) -> str:
-    """``"ell"`` or ``"bcsr"`` — which kernel grid wastes less work.
+    """``"ell"`` or ``"bcsr"`` — alias of
+    :func:`repro.plan.preferred_layout` (the ELL-pad waste heuristic)."""
+    from repro.plan import layout as _plan_layout
 
-    The ELL grid runs ``nrb × max_blocks_per_row`` steps; the CSR grid
-    runs ``nnz_blocks``. Choose CSR once the pad's wasted fraction
-    crosses :data:`ELL_WASTE_THRESHOLD` (host-side: reads the mask).
-    """
-    nrb, mbpr = w.col_idx.shape
-    nnz = int(jax.device_get(w.nnz_blocks))
-    waste = 1.0 - nnz / float(nrb * mbpr)
-    return "bcsr" if waste > ELL_WASTE_THRESHOLD else "ell"
+    return _plan_layout.preferred_layout(w)
 
 
 def to_preferred_layout(w: Weight) -> Weight:
-    """Re-layout an ELL weight to block-CSR when its occupancy is skewed
-    enough for the occupancy-exact grid to win (host-side; identity for
-    dense and already-CSR weights)."""
-    if isinstance(w, BlockSparseMatrix) and preferred_layout(w) == "bcsr":
-        return BlockCSRMatrix.from_bsr(w)
-    return w
+    """Alias of :func:`repro.plan.to_preferred_layout`."""
+    from repro.plan import layout as _plan_layout
+
+    return _plan_layout.to_preferred_layout(w)
 
 
 def layer_grid_steps(w: Weight, n: int, *, block_n: int = 128) -> int:
     """Exact kernel grid steps one forward layer executes on an (·, n)
-    activation panel — the hardware-independent cost model the serving
-    layer accounts in (`docs/serving.md`).
+    activation panel (alias of :func:`repro.plan.layer_grid_steps` —
+    the hardware-independent cost model, see `docs/serving.md`)."""
+    from repro.plan import cost as _plan_cost
 
-    ELL: ``nrb × max_blocks_per_row × n_tiles`` (the pad is paid on every
-    block-row); block-CSR: ``total_nnz_blocks × n_tiles`` (occupancy-
-    exact); dense: the full ``(m/bm) × (n/bn) × (k/bk)`` tile grid.
-    Mirrors the effective-block-size shrink of ``repro.kernels.ops`` so
-    narrow panels are accounted at the tile width they actually run at.
-    """
-    from repro.kernels import bcsr_spmm as _bcsr_kernel
-    from repro.kernels.ops import _ceil_mult
-
-    bn = min(block_n, _ceil_mult(n))
-    n_tiles = -(-n // bn)
-    if isinstance(w, BlockCSRMatrix):
-        return _bcsr_kernel.grid_steps(w, n, bn)
-    if isinstance(w, BlockSparseMatrix):
-        nrb, mbpr = w.col_idx.shape
-        return nrb * mbpr * n_tiles
-    m, k = w.shape
-    bm = min(128, _ceil_mult(m))
-    bk = min(128, _ceil_mult(k))
-    return -(-m // bm) * n_tiles * -(-k // bk)
+    return _plan_cost.layer_grid_steps(w, n, block_n=block_n)
 
 
 def dnn_grid_steps(
     weights: Sequence[Weight], n: int, *, block_n: int = 128
 ) -> int:
-    """Total forward grid steps of the L-layer stack on an (m, n) panel.
+    """Total forward grid steps of the L-layer stack on an (m, n) panel
+    (alias of :func:`repro.plan.stack_grid_steps`; a compiled
+    :class:`repro.plan.StackPlan` carries this as its precomputed
+    ``grid_steps`` property)."""
+    from repro.plan import cost as _plan_cost
 
-    The VMEM-resident fused kernel's grid is ``(n_tiles, L, nrb, mbpr)``
-    — exactly the Σ of its layers' ELL grids — so this sum is the step
-    count for BOTH the layered and the resident dispatch; residency
-    changes pallas_call count and HBM traffic, not grid steps.
-    """
-    return sum(layer_grid_steps(w, n, block_n=block_n) for w in weights)
+    return _plan_cost.stack_grid_steps(weights, n, block_n=block_n)
 
 
 def dnn_layer(w: Weight, y: Array, b: Array, *, fused: bool = True) -> Array:
@@ -166,29 +157,19 @@ def resident_eligible(
     weights: Sequence[Weight], *, block_n: int = 128
 ) -> bool:
     """Can this stack run through the single-call VMEM-resident kernel?
+    (Alias of :func:`repro.plan.resident_eligible` — the route decision
+    tree lives in ``repro.plan.routes``.)"""
+    from repro.plan import routes as _plan_routes
 
-    Requires: ≥1 layer, all layers BSR with identical square shape /
-    block shape / pad width, and the activation panel (at this
-    ``block_n``) within the VMEM budget. (BlockCSRMatrix stacks take the
-    layered path — per-layer ``total_blocks`` varies, so there is no
-    static stacked layout.)
-    """
-    from repro.kernels import fused_mlp as _fmlp
+    return _plan_routes.resident_eligible(weights, block_n=block_n)
 
-    if not weights:
-        return False
-    first = weights[0]
-    if not isinstance(first, BlockSparseMatrix):
-        return False
-    if not all(
-        isinstance(w, BlockSparseMatrix)
-        and w.shape == first.shape
-        and w.block_shape == first.block_shape
-        and w.max_blocks_per_row == first.max_blocks_per_row
-        for w in weights
-    ):
-        return False
-    return _fmlp.fused_mlp_eligible(first, block_n)
+
+def _has_tracers(*trees) -> bool:
+    return any(
+        isinstance(leaf, jax.core.Tracer)
+        for tree in trees
+        for leaf in jax.tree.leaves(tree)
+    )
 
 
 def dnn_forward_resident(
@@ -205,7 +186,26 @@ def dnn_forward_resident(
     L−1 HBM activation round-trips. Falls back to ``dnn_forward(...,
     fused=True)`` when the stack is ineligible (heterogeneous, dense,
     CSR-layout, non-square, or panel too large for VMEM).
+
+    A plan-backed wrapper: with default knobs the stack's route, layout
+    choices, and executable come from the shared
+    :class:`repro.plan.PlanCache` — repeated calls on the same topology
+    and panel width reuse one compiled plan. Explicit ``block_n``/
+    ``interpret`` overrides take the direct path, as does any call under
+    trace (a traced topology cannot be fingerprinted host-side, and a
+    traced ``y0`` means someone is differentiating or vmapping through
+    this forward-only wrapper — the inline fallback keeps the legacy
+    XLA-differentiable behaviour for ineligible stacks).
     """
+    if (
+        block_n == 128
+        and interpret is None
+        and not _has_tracers(list(weights), list(biases), y0)
+    ):
+        from repro.plan import default_cache
+
+        plan = default_cache().get(weights, biases, max(y0.shape[1], 1))
+        return plan.forward(y0)
     if not resident_eligible(weights, block_n=block_n):
         return dnn_forward(weights, biases, y0, fused=True)
     from repro.kernels import ops as kernel_ops
@@ -218,22 +218,47 @@ def dnn_forward_resident(
 
 
 def dnn_layer_trainable(
-    w: Weight, y: Array, b: Array, *, interpret: bool | None = None
+    w: Weight,
+    y: Array,
+    b: Array,
+    *,
+    interpret: bool | None = None,
+    transpose_plan=None,
 ) -> Array:
     """One differentiable layer max(W·Y + b⊗1ᵀ, 0) through the custom-VJP
     kernel wrappers (dense weights use the XLA fused path, which JAX
-    differentiates natively)."""
+    differentiates natively). ``transpose_plan`` (for block-CSR weights)
+    is the cached backward transpose from a ``repro.plan`` StackPlan —
+    without it every backward pass re-sorts the frozen topology."""
     from repro.kernels import ops as kernel_ops
 
     if isinstance(w, BlockCSRMatrix):
         return kernel_ops.bcsr_spmm(
-            w, y, b, fuse_bias_relu=True, interpret=interpret
+            w, y, b, transpose_plan, fuse_bias_relu=True, interpret=interpret
         )
     if isinstance(w, BlockSparseMatrix):
         return kernel_ops.bsr_spmm(
             w, y, b, fuse_bias_relu=True, interpret=interpret
         )
     return sparse_ops.dense_matmul_fused_relu(w, y, b)
+
+
+def _layer_transpose_plans(weights: Sequence[Weight], plan):
+    """Per-layer cached transposes from a ``repro.plan`` StackPlan (or
+    None → no caching, the legacy re-sort-every-backward behaviour)."""
+    if plan is None:
+        return (None,) * len(weights)
+    if not plan.differentiable:
+        raise ValueError(
+            "the supplied plan is not differentiable; build it with "
+            "differentiable=True (PlanCache.get(..., differentiable=True))"
+        )
+    if plan.n_layers != len(weights):
+        raise ValueError(
+            f"plan has {plan.n_layers} layers but the stack has "
+            f"{len(weights)}"
+        )
+    return plan.transpose_plans
 
 
 def dnn_forward_trainable(
@@ -243,6 +268,7 @@ def dnn_forward_trainable(
     *,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    plan=None,
 ) -> Array:
     """L-layer forward whose backward pass is kernel-resident.
 
@@ -252,11 +278,19 @@ def dnn_forward_trainable(
     autodiff — the pragmatic choice on CPU where kernels interpret).
     Both are ``jax.value_and_grad``-compatible; the resident fused
     forward is NOT (see ``dnn_forward_resident``).
+
+    ``plan``: a differentiable :class:`repro.plan.StackPlan` built for
+    this topology. Its cached block-CSR transposes make the backward
+    sort-free — the frozen topology is sorted once at plan build, not
+    once per backward pass.
     """
+    tps = _layer_transpose_plans(weights, plan)
     y = y0
-    for w, b in zip(weights, biases):
+    for w, b, tp in zip(weights, biases, tps):
         if use_kernel:
-            y = dnn_layer_trainable(w, y, b, interpret=interpret)
+            y = dnn_layer_trainable(
+                w, y, b, interpret=interpret, transpose_plan=tp
+            )
         else:
             y = dnn_layer(w, y, b, fused=True)
     return y
@@ -270,16 +304,18 @@ def dnn_value_and_grad(
     *,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    plan=None,
 ):
     """The paper's DNN as a training step core: mean-squared loss of the
     forward pass against ``targets``, differentiated wrt weights AND
     biases. Returns ``(loss, (dweights, dbiases))`` where sparse weight
     cotangents keep the primal layout (stored blocks only; integer
-    topology leaves carry float0 — optimizers skip them by dtype)."""
+    topology leaves carry float0 — optimizers skip them by dtype).
+    ``plan`` as in :func:`dnn_forward_trainable`."""
 
     def loss_fn(ws, bs):
         out = dnn_forward_trainable(
-            ws, bs, y0, use_kernel=use_kernel, interpret=interpret
+            ws, bs, y0, use_kernel=use_kernel, interpret=interpret, plan=plan
         )
         return 0.5 * jnp.mean((out - targets) ** 2)
 

@@ -17,11 +17,16 @@ kernels so ``jax.grad`` / ``jax.value_and_grad`` flow through them with
 
 Backward-pass routing:
 
-  * ``bcsr`` — dB runs through the **Pallas CSR kernel itself** on
-    ``a.transpose()`` (the device-side block-CSR transpose is fully
-    jittable because ``total_blocks`` is static), so the backward hot
-    path is kernel-resident like the forward. dA uses the jnp sampled
-    product (``sparse.ops.bcsr_weight_cotangent``).
+  * ``bcsr`` — dB runs through the **Pallas CSR kernel itself** on the
+    block-CSR transpose (fully jittable because ``total_blocks`` is
+    static), so the backward hot path is kernel-resident like the
+    forward. dA uses the jnp sampled product
+    (``sparse.ops.bcsr_weight_cotangent``). The transpose's argsort is
+    the only per-call analysis left: pass a cached
+    :class:`~repro.sparse.bcsr.BcsrTransposePlan` (built once per
+    topology by ``repro.plan`` / ``BlockCSRMatrix.transpose_plan``) and
+    the backward re-sorts NOTHING — it gathers fresh values through the
+    cached permutation instead.
   * ``bsr/ELL`` — the ELL transpose needs a static output pad width that
     a traced weight cannot provide, so dB uses the occupancy-exact
     scatter-⊕ (``sparse.ops.bsr_transpose_matmul``) and dA the sampled
@@ -141,12 +146,24 @@ bsr_spmm_diff.defvjp(_bsr_fwd, _bsr_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def bcsr_spmm_diff(cfg: SpmmConfig, a: BlockCSRMatrix, b: Array, bias: Array):
+def bcsr_spmm_diff(
+    cfg: SpmmConfig,
+    a: BlockCSRMatrix,
+    b: Array,
+    bias: Array,
+    transpose_plan=None,
+):
     """Differentiable ``bcsr_spmm`` (plus_times). Same raw-kernel caveat
     as the primal: empty block-rows are left unwritten — the ``kernels.
     ops`` wrapper splices the fill in OUTSIDE this rule (so upstream
     cotangents for empty rows arrive here already zeroed by the
-    ``where``'s own VJP, and the garbage rows can never leak)."""
+    ``where``'s own VJP, and the garbage rows can never leak).
+
+    ``transpose_plan`` (a :class:`~repro.sparse.bcsr.BcsrTransposePlan`
+    or None) only feeds the backward pass: with it, dB's transpose is a
+    gather through the cached permutation; without it, every backward
+    re-sorts the (frozen) topology."""
+    del transpose_plan  # primal never needs it
     return _bcsr.bcsr_spmm(
         a,
         b,
@@ -158,18 +175,20 @@ def bcsr_spmm_diff(cfg: SpmmConfig, a: BlockCSRMatrix, b: Array, bias: Array):
     )
 
 
-def _bcsr_fwd(cfg, a, b, bias):
-    out = bcsr_spmm_diff(cfg, a, b, bias)
-    return out, (a, b, bias, out)
+def _bcsr_fwd(cfg, a, b, bias, transpose_plan):
+    out = bcsr_spmm_diff(cfg, a, b, bias, transpose_plan)
+    return out, (a, b, bias, out, transpose_plan)
 
 
 def _bcsr_bwd(cfg, res, g):
-    a, b, bias, out = res
+    a, b, bias, out, tp = res
     dz, dbias = _relu_mask_and_bias_grad(cfg, out, g, bias)
     # dB = Aᵀ·dZ through the Pallas kernel itself: the block-CSR
     # transpose is fully jittable (static total_blocks), so the backward
-    # pass stays on the occupancy-exact kernel grid (∝ true nnz).
-    at = a.transpose()
+    # pass stays on the occupancy-exact kernel grid (∝ true nnz). With a
+    # cached plan the per-call argsort disappears entirely — the frozen
+    # topology was sorted once, at plan-build time.
+    at = a.transpose() if tp is None else tp.apply(a)
     db_raw = _bcsr.bcsr_spmm(
         at,
         dz,
@@ -195,7 +214,22 @@ def _bcsr_bwd(cfg, res, g):
         a.shape,
         a.block_shape,
     )
-    return da, db, dbias
+    # The plan is pure frozen topology (int/bool leaves) — its cotangent
+    # is the float0 pytree JAX expects for non-differentiable leaves.
+    dtp = None
+    if tp is not None:
+        from repro.sparse.bcsr import BcsrTransposePlan
+
+        dtp = BcsrTransposePlan(
+            _float0_zeros(tp.order),
+            _float0_zeros(tp.row_ptr),
+            _float0_zeros(tp.row_id),
+            _float0_zeros(tp.col_idx),
+            _float0_zeros(tp.valid),
+            tp.shape,
+            tp.block_shape,
+        )
+    return da, db, dbias, dtp
 
 
 bcsr_spmm_diff.defvjp(_bcsr_fwd, _bcsr_bwd)

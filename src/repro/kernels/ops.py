@@ -174,6 +174,7 @@ def bcsr_spmm(
     a: BlockCSRMatrix,
     b: Array,
     bias: Array | None = None,
+    transpose_plan=None,
     *,
     semiring_name: str = "plus_times",
     fuse_bias_relu: bool = False,
@@ -189,6 +190,9 @@ def bcsr_spmm(
     Differentiable for ``plus_times``: the custom VJP runs the backward
     dX = Aᵀ·dY through this same Pallas kernel on the (jittable) block-
     CSR transpose, and the weight cotangent lands only on stored blocks.
+    ``transpose_plan`` (``BcsrTransposePlan`` from ``a.transpose_plan()``
+    or a ``repro.plan`` StackPlan) removes the backward's per-call
+    topology re-sort — the frozen pattern is sorted once, at plan build.
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = b.shape[1]
@@ -199,7 +203,7 @@ def bcsr_spmm(
     if semiring_name == "plus_times":
         bias_arr = bias if bias is not None else jnp.zeros((a.shape[0],), jnp.float32)
         cfg = _ad.SpmmConfig(fuse_bias_relu, block_n, interpret)
-        out = _ad.bcsr_spmm_diff(cfg, a, bp, bias_arr)[:, :n]
+        out = _ad.bcsr_spmm_diff(cfg, a, bp, bias_arr, transpose_plan)[:, :n]
     else:
         out = _bcsr.bcsr_spmm(
             a,

@@ -39,11 +39,16 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
 
 
 def linear(
-    w, x: Array, bias: Array | None = None, *, use_kernel: bool | None = None
+    w,
+    x: Array,
+    bias: Array | None = None,
+    *,
+    use_kernel: bool | None = None,
+    transpose_plan=None,
 ) -> Array:
     """y = x @ W (+ b). ``w`` is dense (d_in, d_out) or sparse
     (d_out, d_in) — ELL-padded BSR for regular topologies, block-CSR for
-    skewed/pruned ones (see ``repro.core.dnn.preferred_layout``).
+    skewed/pruned ones (see ``repro.plan.preferred_layout``).
 
     Sparse weights store the *output-major* layout (as the paper's W
     matrices are applied ``W @ Y``), so they compute ``(W @ x^T)^T``
@@ -54,6 +59,11 @@ def linear(
     paths; ``None`` auto-picks the kernels on TPU and the XLA paths
     elsewhere (interpret-mode kernels are correctness-only). Both paths
     are ``jax.grad``-compatible and sparse-preserving.
+
+    ``transpose_plan``: for a block-CSR ``w`` on the kernel path, the
+    cached backward transpose (``w.transpose_plan()`` or a LayerPlan's,
+    see ``repro.plan``) so ``jax.grad`` through this projection never
+    re-sorts the frozen topology.
     """
     if isinstance(w, (BlockSparseMatrix, BlockCSRMatrix)):
         lead = x.shape[:-1]
@@ -64,10 +74,13 @@ def linear(
         if use_kernel:
             from repro.kernels import ops as kernel_ops
 
-            matmul = kernel_ops.bcsr_spmm if is_csr else kernel_ops.bsr_spmm
+            if is_csr:
+                out = kernel_ops.bcsr_spmm(w, xt, None, transpose_plan)
+            else:
+                out = kernel_ops.bsr_spmm(w, xt)
         else:
             matmul = sparse_ops.bcsr_matmul if is_csr else sparse_ops.bsr_matmul
-        out = matmul(w, xt)  # (d_out, tokens)
+            out = matmul(w, xt)  # (d_out, tokens)
         y = out.T.reshape(*lead, w.shape[0])
     else:
         y = jnp.einsum("...i,io->...o", x, w)

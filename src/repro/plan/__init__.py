@@ -1,0 +1,60 @@
+"""Compile-once execution plans (`docs/architecture.md`).
+
+The paper's economics — inference cost ∝ stored nonzeros — assume the
+per-topology analysis is free. It is, but only if it happens once: this
+package compiles a sparse stack's layout choices, route (fused /
+layered / XLA), exact grid-step bill, cached block-CSR backward
+transpose, and a per-width-class jitted executable into a
+:class:`StackPlan`, cached in a :class:`PlanCache` keyed by
+``(topology fingerprint, width class, differentiable?)``. Every
+execution path — ``repro.core.dnn``, ``repro.serve``, ``repro.train``
+— consults plans instead of re-deriving dispatch per call.
+"""
+
+from repro.plan.cache import PlanCache, default_cache  # noqa: F401
+from repro.plan.cost import layer_grid_steps, stack_grid_steps  # noqa: F401
+from repro.plan.layout import (  # noqa: F401
+    ELL_WASTE_THRESHOLD,
+    layer_layout,
+    preferred_layout,
+    to_preferred_layout,
+)
+from repro.plan.routes import (  # noqa: F401
+    ROUTE_FUSED,
+    ROUTE_LAYERED,
+    ROUTE_XLA,
+    layer_path,
+    resident_eligible,
+)
+from repro.plan.stack_plan import (  # noqa: F401
+    DEFAULT_WIDTH_CLASSES,
+    LayerPlan,
+    PlanKey,
+    StackPlan,
+    build_plan,
+    quantize_width,
+    topology_fingerprint,
+)
+
+__all__ = [
+    "ELL_WASTE_THRESHOLD",
+    "DEFAULT_WIDTH_CLASSES",
+    "ROUTE_FUSED",
+    "ROUTE_LAYERED",
+    "ROUTE_XLA",
+    "LayerPlan",
+    "PlanCache",
+    "PlanKey",
+    "StackPlan",
+    "build_plan",
+    "default_cache",
+    "layer_grid_steps",
+    "layer_layout",
+    "layer_path",
+    "preferred_layout",
+    "quantize_width",
+    "resident_eligible",
+    "stack_grid_steps",
+    "to_preferred_layout",
+    "topology_fingerprint",
+]

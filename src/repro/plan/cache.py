@@ -1,0 +1,154 @@
+"""LRU cache of compiled :class:`~repro.plan.StackPlan` objects.
+
+The cache is what turns per-call analysis into per-topology analysis:
+serving looks a plan up per dispatched panel, and after the first panel
+of each width class every lookup is a hit — zero layout decisions, zero
+grid-step sums, zero topology sorts, zero recompiles on the hot path.
+
+Keying: ``(topology fingerprint, width class, differentiable?,
+requested residency)`` — see :class:`repro.plan.PlanKey`. Because plans
+bind weight/bias VALUES (serving weights are frozen), a hit additionally
+requires the cached plan's bound arrays to be the same objects the
+caller passed; a same-topology stack with different value arrays
+rebuilds instead of silently serving stale numbers.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Sequence
+
+from repro.plan.layout import Weight
+from repro.plan.stack_plan import (
+    PlanKey,
+    StackPlan,
+    build_plan,
+    topology_fingerprint,
+)
+
+
+class PlanCache:
+    """Bounded LRU plan cache with observable hit/miss/eviction stats."""
+
+    def __init__(self, max_size: int = 16):
+        if max_size < 1:
+            raise ValueError("max_size must be >= 1")
+        self.max_size = max_size
+        self._entries: "OrderedDict[PlanKey, StackPlan]" = OrderedDict()
+        self.lookups = 0
+        self.hits = 0
+        self.misses = 0
+        self.builds = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._entries
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._entries),
+            "max_size": self.max_size,
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "misses": self.misses,
+            "builds": self.builds,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }
+
+    def get(
+        self,
+        weights: Sequence[Weight],
+        biases,
+        width: int,
+        *,
+        differentiable: bool = False,
+        use_resident: bool | None = None,
+        relayout: bool | None = None,
+        fingerprint: str | None = None,
+    ) -> StackPlan:
+        """The plan for this (stack, width, differentiable?) — cached.
+
+        ``fingerprint`` skips the host-side topology hash when the
+        caller already knows it (the engine computes it once at
+        construction).
+        """
+        weights = tuple(weights)
+        biases = tuple(biases)
+        if fingerprint is None:
+            fingerprint = topology_fingerprint(weights)
+        key = PlanKey(fingerprint, width, differentiable, use_resident)
+        self.lookups += 1
+        plan = self._entries.get(key)
+        if (
+            plan is not None
+            and len(plan.source_weights) == len(weights)
+            and all(a is b for a, b in zip(plan.source_weights, weights))
+            and all(a is b for a, b in zip(plan.source_biases, biases))
+        ):
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return plan
+        self.misses += 1
+        # A resident plan for the same stack at ANOTHER width class can
+        # donate its width-independent artifacts (relayouted weights,
+        # cached transposes, fused stack) — only the executable and the
+        # grid-step bill are per-width.
+        donor = None
+        for cand in reversed(self._entries.values()):
+            if (
+                cand.key.fingerprint == fingerprint
+                and cand.differentiable == differentiable
+                and cand.key.resident == use_resident
+                and len(cand.source_weights) == len(weights)
+                and all(
+                    a is b for a, b in zip(cand.source_weights, weights)
+                )
+                and all(a is b for a, b in zip(cand.source_biases, biases))
+            ):
+                donor = cand
+                break
+        plan = build_plan(
+            weights,
+            biases,
+            width,
+            differentiable=differentiable,
+            use_resident=use_resident,
+            relayout=relayout,
+            fingerprint=fingerprint,
+            donor=donor,
+        )
+        self.builds += 1
+        self._entries[key] = plan
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_size:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return plan
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# Shared cache behind the module-level convenience wrappers
+# (repro.core.dnn.dnn_forward_resident and friends). Engines own their
+# own caches; this one serves ad-hoc functional callers. Plans hold
+# strong references to the weight stacks they bind, so this cache is
+# kept SMALL — loops over many transient models retain at most
+# ``max_size`` stacks; call ``default_cache().clear()`` to drop them
+# eagerly.
+_DEFAULT_CACHE: PlanCache | None = None
+
+
+def default_cache() -> PlanCache:
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = PlanCache(max_size=4)
+    return _DEFAULT_CACHE

@@ -1,0 +1,56 @@
+"""Exact grid-step accounting — the hardware-independent cost model.
+
+One forward layer on an (·, n) activation panel executes a knowable
+number of kernel grid steps; a :class:`~repro.plan.StackPlan` carries
+the stack's total as a precomputed property so serving can bill pad
+waste without re-deriving the sum per panel. Lifted out of
+``repro.core.dnn`` (which keeps ``layer_grid_steps``/``dnn_grid_steps``
+as aliases).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.plan.layout import Weight
+from repro.sparse.bcsr import BlockCSRMatrix
+from repro.sparse.bsr import BlockSparseMatrix
+
+
+def layer_grid_steps(w: Weight, n: int, *, block_n: int = 128) -> int:
+    """Exact kernel grid steps one forward layer executes on an (·, n)
+    activation panel.
+
+    ELL: ``nrb × max_blocks_per_row × n_tiles`` (the pad is paid on every
+    block-row); block-CSR: ``total_nnz_blocks × n_tiles`` (occupancy-
+    exact); dense: the full ``(m/bm) × (n/bn) × (k/bk)`` tile grid.
+    Mirrors the effective-block-size shrink of ``repro.kernels.ops`` so
+    narrow panels are accounted at the tile width they actually run at.
+    """
+    from repro.kernels import bcsr_spmm as _bcsr_kernel
+    from repro.kernels.ops import _ceil_mult
+
+    bn = min(block_n, _ceil_mult(n))
+    n_tiles = -(-n // bn)
+    if isinstance(w, BlockCSRMatrix):
+        return _bcsr_kernel.grid_steps(w, n, bn)
+    if isinstance(w, BlockSparseMatrix):
+        nrb, mbpr = w.col_idx.shape
+        return nrb * mbpr * n_tiles
+    m, k = w.shape
+    bm = min(128, _ceil_mult(m))
+    bk = min(128, _ceil_mult(k))
+    return -(-m // bm) * n_tiles * -(-k // bk)
+
+
+def stack_grid_steps(
+    weights: Sequence[Weight], n: int, *, block_n: int = 128
+) -> int:
+    """Total forward grid steps of the L-layer stack on an (m, n) panel.
+
+    The VMEM-resident fused kernel's grid is ``(n_tiles, L, nrb, mbpr)``
+    — exactly the Σ of its layers' ELL grids — so this sum is the step
+    count for BOTH the layered and the resident dispatch; residency
+    changes pallas_call count and HBM traffic, not grid steps.
+    """
+    return sum(layer_grid_steps(w, n, block_n=block_n) for w in weights)

@@ -1,0 +1,72 @@
+"""The route decision tree — how a sparse stack executes.
+
+One decision, made once per (topology, width-class, differentiable?)
+key at plan-build time and never re-derived per call:
+
+    resident-eligible AND not differentiable AND fused allowed?
+      └─ yes → **fused**: ONE VMEM-resident ``pallas_call`` for the
+               whole stack (``repro.kernels.fused_mlp``)
+      └─ no  → per-layer dispatch, by execution layout:
+               block-CSR → **kernel-bcsr** (occupancy-exact grid; the
+                           differentiable backward reuses the plan's
+                           cached transpose)
+               ELL-BSR   → **kernel-ell**
+               dense     → **kernel-dense** (Pallas tiled matmul), or
+                           **xla-dense** when the plan must stay
+                           ``jax.grad``-compatible (the dense Pallas
+                           kernel has no VJP)
+    all layers xla-dense → the stack route reads **xla** (pure-XLA
+    fallback); otherwise **layered**.
+
+See ``docs/architecture.md`` for the prose version of this tree.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.plan.layout import Weight, layer_layout
+from repro.sparse.bsr import BlockSparseMatrix
+
+ROUTE_FUSED = "fused"
+ROUTE_LAYERED = "layered"
+ROUTE_XLA = "xla"
+
+
+def resident_eligible(
+    weights: Sequence[Weight], *, block_n: int = 128
+) -> bool:
+    """Can this stack run through the single-call VMEM-resident kernel?
+
+    Requires: ≥1 layer, all layers BSR with identical square shape /
+    block shape / pad width, and the activation panel (at this
+    ``block_n``) within the VMEM budget. (BlockCSRMatrix stacks take the
+    layered path — per-layer ``total_blocks`` varies, so there is no
+    static stacked layout.)
+    """
+    from repro.kernels import fused_mlp as _fmlp
+
+    if not weights:
+        return False
+    first = weights[0]
+    if not isinstance(first, BlockSparseMatrix):
+        return False
+    if not all(
+        isinstance(w, BlockSparseMatrix)
+        and w.shape == first.shape
+        and w.block_shape == first.block_shape
+        and w.max_blocks_per_row == first.max_blocks_per_row
+        for w in weights
+    ):
+        return False
+    return _fmlp.fused_mlp_eligible(first, block_n)
+
+
+def layer_path(w: Weight, *, differentiable: bool) -> str:
+    """The per-layer execution path for the layered route."""
+    layout = layer_layout(w)
+    if layout == "bcsr":
+        return "kernel-bcsr"
+    if layout == "ell":
+        return "kernel-ell"
+    return "xla-dense" if differentiable else "kernel-dense"

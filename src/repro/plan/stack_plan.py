@@ -1,0 +1,414 @@
+"""Compile-once execution plans for sparse DNN stacks.
+
+Every entry point used to re-derive *how* to run a stack on every call:
+layout choice, fused-residency eligibility, grid-step billing, and —
+worst — the block-CSR backward re-sorted the frozen topology every
+single backward pass. A :class:`StackPlan` does all of that analysis
+ONCE per ``(topology-fingerprint, panel-width class, differentiable?)``
+key (the GraphChallenge amortization pattern: the topology is fixed,
+the per-topology analysis should be too) and carries:
+
+* the chosen layout per layer (the ELL-pad waste heuristic of
+  ``repro.plan.layout``, applied at build time instead of per call);
+* the route — fused / layered / XLA fallback (``repro.plan.routes``);
+* the exact grid-step bill for the plan's panel width
+  (``repro.plan.cost``);
+* the **cached block-CSR transpose** (sorted layout + permutation,
+  ``BcsrTransposePlan``) so differentiable paths never re-sort;
+* a **jitted executable** per plan — serving quantizes panel widths to
+  a small set of classes (:func:`quantize_width`) and reuses compiled
+  plans instead of recompiling on every new panel width.
+
+Plans are built through :class:`repro.plan.PlanCache`; the legacy entry
+points (``repro.core.dnn``, ``repro.serve``) stay as thin wrappers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.plan import cost as _cost
+from repro.plan import layout as _layout
+from repro.plan import routes as _routes
+from repro.plan.layout import Weight
+from repro.sparse.bcsr import BcsrTransposePlan, BlockCSRMatrix
+from repro.sparse.bsr import BlockSparseMatrix
+
+Array = jax.Array
+
+# Panel-width classes serving quantizes to by default: one compiled
+# executable per class instead of one per distinct request-batch width.
+DEFAULT_WIDTH_CLASSES = (8, 16, 32, 64, 128, 256, 512)
+
+
+def quantize_width(n: int, classes: Sequence[int] | None = None) -> int:
+    """Smallest width class covering an ``n``-column panel.
+
+    ``classes=None`` → identity (no quantization). Widths beyond the
+    largest class round up to a multiple of it.
+    """
+    if not classes:
+        return n
+    for c in sorted(classes):
+        if n <= c:
+            return c
+    top = max(classes)
+    return -(-n // top) * top
+
+
+def topology_fingerprint(weights: Sequence[Weight]) -> str:
+    """Hash of the stack's *topology*: per-layer layout class, shapes,
+    and index/mask arrays — NOT the stored values. Two stacks share a
+    fingerprint iff every plan-relevant decision (layouts, routes, grid
+    bills, transposes) is identical for both. Host-side (one device_get
+    per topology; callers cache the result)."""
+    h = hashlib.sha1()
+    for w in weights:
+        if isinstance(w, BlockCSRMatrix):
+            h.update(b"bcsr")
+            h.update(repr((w.shape, w.block_shape, w.total_blocks)).encode())
+            for arr in (w.row_ptr, w.row_id, w.col_idx, w.valid):
+                h.update(np.asarray(jax.device_get(arr)).tobytes())
+        elif isinstance(w, BlockSparseMatrix):
+            h.update(b"ell")
+            h.update(
+                repr((w.shape, w.block_shape, w.max_blocks_per_row)).encode()
+            )
+            for arr in (w.col_idx, w.block_mask):
+                h.update(np.asarray(jax.device_get(arr)).tobytes())
+        else:
+            h.update(b"dense")
+            h.update(repr(tuple(w.shape)).encode())
+    return h.hexdigest()
+
+
+class PlanKey(NamedTuple):
+    """What a compiled plan is keyed on. Same topology + same width
+    class + same differentiability (+ same residency request) → the
+    same plan, hence a cache hit and zero recompiles."""
+
+    fingerprint: str
+    width: int
+    differentiable: bool
+    resident: bool | None  # the use_resident tri-state the caller asked
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's precomputed execution decisions."""
+
+    index: int
+    source_layout: str  # layout of the caller's weight ("dense"/"ell"/"bcsr")
+    layout: str  # execution layout after the waste heuristic
+    path: str  # routes.layer_path value, or "fused"
+    grid_steps: int  # exact bill at the plan's width
+    transpose_plan: BcsrTransposePlan | None  # cached backward transpose
+
+
+@dataclasses.dataclass
+class StackPlan:
+    """A compiled execution plan for one sparse stack at one width class.
+
+    Built by :func:`build_plan` (usually via ``PlanCache.get``). The
+    plan binds the weights/biases it was built from — serving weights
+    are frozen, so ``forward(y0)`` reuses the same jitted executable for
+    every panel of this width class. Training passes fresh values
+    through :meth:`forward_trainable`, which only consumes the plan's
+    topology artifacts (layouts + cached transposes).
+    """
+
+    key: PlanKey
+    route: str  # routes.ROUTE_FUSED / ROUTE_LAYERED / ROUTE_XLA
+    layers: tuple[LayerPlan, ...]
+    width: int
+    differentiable: bool
+    grid_steps: int  # exact forward bill for one width-wide panel
+    weights: tuple  # execution weights (post-relayout, bound values)
+    biases: tuple
+    source_weights: tuple  # caller's objects — cache identity check
+    source_biases: tuple
+    _stacked: tuple | None = None  # (stacked_w, stacked_b) for fused
+    _fn: Callable | None = None
+    _compiles: int = 0
+    calls: int = 0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def pallas_calls(self) -> int:
+        """Kernel launches one forward of this plan performs."""
+        if self.route == _routes.ROUTE_FUSED:
+            return 1
+        return sum(1 for lp in self.layers if lp.path != "xla-dense")
+
+    @property
+    def compile_count(self) -> int:
+        """Times the executable was traced (→ compiled) so far."""
+        return self._compiles
+
+    @property
+    def layouts(self) -> tuple[str, ...]:
+        return tuple(lp.layout for lp in self.layers)
+
+    @property
+    def transpose_plans(self) -> tuple[BcsrTransposePlan | None, ...]:
+        return tuple(lp.transpose_plan for lp in self.layers)
+
+    def describe(self) -> dict:
+        """JSON-ready summary (docs/architecture.md shows one)."""
+        return {
+            "fingerprint": self.key.fingerprint[:12],
+            "width": self.width,
+            "differentiable": self.differentiable,
+            "route": self.route,
+            "layouts": list(self.layouts),
+            "paths": [lp.path for lp in self.layers],
+            "grid_steps": self.grid_steps,
+            "pallas_calls": self.pallas_calls,
+            "cached_transposes": sum(
+                1 for lp in self.layers if lp.transpose_plan is not None
+            ),
+            "compiles": self.compile_count,
+            "calls": self.calls,
+        }
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    def forward(self, y0: Array) -> Array:
+        """One forward pass of the bound stack over an (m, k) panel,
+        k ≤ the plan's width. The panel is padded to the width class so
+        every call of this plan reuses ONE compiled executable."""
+        m, k = y0.shape
+        if k > self.width:
+            raise ValueError(
+                f"panel width {k} exceeds this plan's width class "
+                f"{self.width}; fetch a plan for the wider class"
+            )
+        if k < self.width:
+            y0 = jnp.pad(y0, ((0, 0), (0, self.width - k)))
+        self.calls += 1
+        if self.route == _routes.ROUTE_FUSED:
+            out = self._fn(self._stacked[0], self._stacked[1], y0)
+        else:
+            out = self._fn(self.weights, self.biases, y0)
+        return out[:, :k]
+
+    def forward_trainable(
+        self,
+        weights: Sequence[Weight],
+        biases: Sequence[Array],
+        y0: Array,
+        *,
+        use_kernel: bool = True,
+        interpret: bool | None = None,
+    ) -> Array:
+        """Differentiable forward with CALLER-supplied (fresh) values —
+        the plan contributes only its frozen-topology artifacts, most
+        importantly the cached block-CSR transposes, so a train step
+        built on this never re-sorts the topology."""
+        if not self.differentiable:
+            raise ValueError(
+                "forward_trainable needs a differentiable plan; rebuild "
+                "with differentiable=True"
+            )
+        from repro.core import dnn as _dnn
+
+        y = y0
+        for lp, w, b in zip(self.layers, weights, biases):
+            if use_kernel:
+                y = _dnn.dnn_layer_trainable(
+                    w, y, b, interpret=interpret,
+                    transpose_plan=lp.transpose_plan,
+                )
+            else:
+                y = _dnn.dnn_layer(w, y, b, fused=True)
+        return y
+
+
+def _make_executable(plan: StackPlan) -> Callable:
+    """The plan's jitted forward. Weights ride as pytree arguments (not
+    closure constants) so value updates never retrace; the trace counter
+    increments exactly once per compilation, which is how serving counts
+    recompiles per width class."""
+    from repro.kernels import ops as kernel_ops
+    from repro.sparse import ops as sparse_ops
+
+    if plan.route == _routes.ROUTE_FUSED:
+
+        def run_fused(stacked_w, stacked_b, y):
+            plan._compiles += 1
+            return kernel_ops.fused_mlp_forward(stacked_w, stacked_b, y)
+
+        return jax.jit(run_fused)
+
+    paths = tuple(lp.path for lp in plan.layers)
+    tps = plan.transpose_plans
+
+    def run_layered(weights, biases, y):
+        plan._compiles += 1
+        for path, tp, w, b in zip(paths, tps, weights, biases):
+            if path == "kernel-bcsr":
+                y = kernel_ops.bcsr_spmm(w, y, b, tp, fuse_bias_relu=True)
+            elif path == "kernel-ell":
+                y = kernel_ops.bsr_spmm(w, y, b, fuse_bias_relu=True)
+            elif path == "kernel-dense":
+                y = kernel_ops.semiring_matmul(w, y, b, fuse_bias_relu=True)
+            else:  # xla-dense: grad-compatible fused XLA form
+                y = sparse_ops.dense_matmul_fused_relu(w, y, b)
+        return y
+
+    return jax.jit(run_layered)
+
+
+def build_plan(
+    weights: Sequence[Weight],
+    biases: Sequence[Array],
+    width: int,
+    *,
+    differentiable: bool = False,
+    use_resident: bool | None = None,
+    relayout: bool | None = None,
+    fingerprint: str | None = None,
+    donor: "StackPlan | None" = None,
+) -> StackPlan:
+    """Compile one :class:`StackPlan` (all the per-topology analysis).
+
+    ``use_resident``: None auto-detects fused eligibility, True demands
+    it (ValueError when ineligible), False forces the layered route —
+    the ``SparseDNNEngine`` tri-state, verbatim. ``relayout`` applies
+    the ELL→CSR waste heuristic to the bound execution weights; default
+    on for inference plans, always off for differentiable plans (their
+    cotangents must mirror the caller's layout).
+
+    ``donor``: an existing plan for the SAME stack (same fingerprint,
+    differentiability, and residency request) at a different width
+    class. Only the width-dependent pieces (grid-step bill, executable)
+    are rebuilt; the width-independent topology artifacts — relayouted
+    execution weights, cached transposes (so the topology is still
+    sorted exactly once no matter how many width classes serve it), and
+    the fused weight stack — are shared by reference.
+    ``PlanCache.get`` supplies this automatically.
+    """
+    weights = tuple(weights)
+    biases = tuple(biases)
+    if len(weights) != len(biases):
+        raise ValueError("weights/biases length mismatch")
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    if fingerprint is None:
+        fingerprint = topology_fingerprint(weights)
+
+    resident_ok = (
+        not differentiable and _routes.resident_eligible(weights)
+    )
+    if use_resident and not resident_ok:
+        raise ValueError(
+            "use_resident=True but the stack is not eligible for the "
+            "VMEM-resident kernel"
+            + (
+                " (differentiable plans route around its missing VJP)"
+                if differentiable
+                else " (needs a homogeneous square BSR stack whose "
+                "activation panel fits VMEM)"
+            )
+        )
+    fused = resident_ok if use_resident is None else bool(use_resident)
+    route = _routes.ROUTE_FUSED if fused else _routes.ROUTE_LAYERED
+
+    if relayout is None:
+        relayout = not differentiable
+    if differentiable and relayout:
+        raise ValueError(
+            "relayout converts bound weights; a differentiable plan "
+            "must keep the caller's layouts so cotangents line up"
+        )
+
+    if donor is not None:
+        if (
+            donor.key.fingerprint != fingerprint
+            or donor.differentiable != differentiable
+            or donor.key.resident != use_resident
+            or donor.n_layers != len(weights)
+        ):
+            raise ValueError(
+                "donor plan does not match this stack's plan key "
+                "(fingerprint / differentiable / residency / layers)"
+            )
+        route = donor.route
+        exec_weights = list(donor.weights)
+        layer_plans = [
+            dataclasses.replace(
+                lp, grid_steps=_cost.layer_grid_steps(ew, width)
+            )
+            for lp, ew in zip(donor.layers, exec_weights)
+        ]
+    else:
+        exec_weights = []
+        layer_plans = []
+        for i, w in enumerate(weights):
+            src_layout = _layout.layer_layout(w)
+            ew = w
+            if route != _routes.ROUTE_FUSED and relayout:
+                ew = _layout.to_preferred_layout(w)
+            exec_layout = _layout.layer_layout(ew)
+            path = (
+                "fused"
+                if route == _routes.ROUTE_FUSED
+                else _routes.layer_path(ew, differentiable=differentiable)
+            )
+            tp = None
+            if differentiable and isinstance(ew, BlockCSRMatrix):
+                # The one and only topology sort for this layer: every
+                # backward of every step — at every width class, via
+                # donor sharing — reuses this plan's permutation.
+                tp = ew.transpose_plan()
+            exec_weights.append(ew)
+            layer_plans.append(
+                LayerPlan(
+                    index=i,
+                    source_layout=src_layout,
+                    layout=exec_layout,
+                    path=path,
+                    grid_steps=_cost.layer_grid_steps(ew, width),
+                    transpose_plan=tp,
+                )
+            )
+        if route == _routes.ROUTE_LAYERED and all(
+            lp.path == "xla-dense" for lp in layer_plans
+        ):
+            route = _routes.ROUTE_XLA
+
+    plan = StackPlan(
+        key=PlanKey(fingerprint, width, differentiable, use_resident),
+        route=route,
+        layers=tuple(layer_plans),
+        width=width,
+        differentiable=differentiable,
+        grid_steps=sum(lp.grid_steps for lp in layer_plans),
+        weights=tuple(exec_weights),
+        biases=biases,
+        source_weights=weights,
+        source_biases=biases,
+    )
+    if route == _routes.ROUTE_FUSED:
+        if donor is not None:
+            plan._stacked = donor._stacked  # one device copy per topology
+        else:
+            from repro.core import dnn as _dnn
+
+            plan._stacked = (
+                _dnn.stack_bsr(list(exec_weights)),
+                jnp.stack(list(biases)),
+            )
+    plan._fn = _make_executable(plan)
+    return plan

@@ -29,6 +29,15 @@ Two call conventions on ``SparseDNNEngine``:
   touches kernels. Step stats carry exact grid-step accounting
   (``repro.core.dnn.dnn_grid_steps``) so pad waste is visible as
   hardware-independent kernel steps, not just wall-clock.
+
+Execution is plan-backed (``repro.plan``, `docs/architecture.md`): the
+engine fingerprints its (frozen) topology once, and every ``step``
+fetches a compiled :class:`repro.plan.StackPlan` from its
+:class:`repro.plan.PlanCache` keyed by the padded panel width — route,
+layouts, grid-step bill, and the jitted executable are all amortized
+across requests. ``step(pad_to=...)`` lets a scheduler quantize panel
+widths to a small set of classes so a handful of compiled plans serve
+every panel (``ContinuousBatcher(width_classes=...)``).
 """
 
 from __future__ import annotations
@@ -41,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import dnn
 from repro.models.model import Model
+from repro.plan import PlanCache, topology_fingerprint
 
 Array = jax.Array
 
@@ -122,6 +132,10 @@ class SparseDNNEngine:
     # flag forces the layered custom-VJP kernel path and REJECTS an
     # explicit use_resident=True.
     differentiable: bool = False
+    # Compiled-plan cache (one per engine unless shared explicitly):
+    # holds one StackPlan per padded panel width seen; size it to the
+    # number of width classes the scheduler quantizes to.
+    plan_cache: PlanCache | None = None
 
     def __post_init__(self):
         self.n_layers = len(self.weights)
@@ -147,11 +161,11 @@ class SparseDNNEngine:
         self._resident = (
             resident_ok if self.use_resident is None else self.use_resident
         )
-        if self._resident:
-            # Stack once — weights are immutable across requests; the
-            # hot path must not rebuild the L-layer stack per infer().
-            self._stacked_w = dnn.stack_bsr(list(self.weights))
-            self._stacked_b = jnp.stack(list(self.biases))
+        if self.plan_cache is None:
+            self.plan_cache = PlanCache(max_size=16)
+        # Fingerprint once — weights are immutable across requests; the
+        # hot path must not re-hash the topology per step.
+        self._fingerprint = topology_fingerprint(tuple(self.weights))
         self._served = 0
         self._steps = 0
         self._next_rid = 0
@@ -162,25 +176,22 @@ class SparseDNNEngine:
         self._staged: list[tuple[list, Array]] = []
         self._staged_count = 0
 
-    def _layered_kernel_forward(self, y: Array) -> Array:
-        """Fallback: one fused kernel call per layer, dispatched on the
-        layer's weight layout (the real kernel path, not the jnp oracle).
-
-        Sparse layers delegate to ``dnn.dnn_layer_trainable`` (the same
-        custom-VJP kernel wrappers). Dense layers split: the dense Pallas
-        kernel has no VJP, so differentiable=True takes the XLA fused
-        form instead — keeping the jax.grad-compatibility guarantee."""
-        from repro.kernels import ops as kernel_ops
-        from repro.sparse.bcsr import BlockCSRMatrix
-        from repro.sparse.bsr import BlockSparseMatrix
-
-        for w, b in zip(self.weights, self.biases):
-            is_dense = not isinstance(w, (BlockCSRMatrix, BlockSparseMatrix))
-            if is_dense and not self.differentiable:
-                y = kernel_ops.semiring_matmul(w, y, b, fuse_bias_relu=True)
-            else:
-                y = dnn.dnn_layer_trainable(w, y, b)
-        return y
+    def _plan_for_width(self, width: int):
+        """The compiled plan serving a ``width``-wide panel, plus
+        whether this lookup hit the cache. Route rules are the plan
+        layer's (fused when eligible and not differentiable; layered
+        per-layout kernels otherwise; dense layers keep jax.grad
+        compatibility under ``differentiable=True`` via the XLA form)."""
+        before = self.plan_cache.hits
+        plan = self.plan_cache.get(
+            tuple(self.weights),
+            tuple(self.biases),
+            width,
+            differentiable=self.differentiable,
+            use_resident=self._resident,
+            fingerprint=self._fingerprint,
+        )
+        return plan, self.plan_cache.hits > before
 
     # ------------------------------------------------------------------
     # step-level API (driven by serve.scheduler.ContinuousBatcher)
@@ -229,23 +240,32 @@ class SparseDNNEngine:
             "pallas_calls": 0,
             "served_total": self._served,
             "engine_steps": self._steps,
+            "plan": None,
         }
 
-    def step(self, limit: int | None = None) -> tuple[Array | None, dict]:
+    def step(
+        self, limit: int | None = None, *, pad_to: int | None = None
+    ) -> tuple[Array | None, dict]:
         """Dispatch ONE padded forward pass over up to ``limit`` staged
         columns (FIFO). Returns ``(Y[L] (m, batch), stats)``; stats carry
         the exact grid-step bill for the padded panel, so idle pad slots
         are visible as kernel steps. ``(None, stats)`` when nothing is
         staged.
+
+        ``pad_to`` pads the panel further, up to that width (itself
+        aligned to ``batch_align``) — the scheduler's width-class
+        quantization hook: panels padded to a shared class width reuse
+        one compiled plan instead of compiling per distinct width.
         """
         if limit is not None and limit < 1:
             raise ValueError(f"step limit must be >= 1, got {limit}")
+        if pad_to is not None and pad_to < 1:
+            raise ValueError(f"pad_to must be >= 1, got {pad_to}")
         batch = (
             self._staged_count
             if limit is None
             else min(limit, self._staged_count)
         )
-        pallas_calls = 1 if self._resident else self.n_layers
         if batch == 0:
             return None, self._idle_stats()
         need = batch
@@ -262,35 +282,35 @@ class SparseDNNEngine:
                 need = 0
         self._staged_count -= batch
         ids = [rid for rids, _ in take for rid in rids]
-        pad = (-batch) % self.batch_align
+        width = batch + (-batch) % self.batch_align
+        if pad_to is not None:
+            width = max(width, pad_to + (-pad_to) % self.batch_align)
         yp = (
             take[0][1]
             if len(take) == 1
             else jnp.concatenate([arr for _, arr in take], axis=1)
         )
-        if pad:
-            yp = jnp.pad(yp, ((0, 0), (0, pad)))
-        if self._resident:
-            from repro.kernels import ops as kernel_ops
-
-            out = kernel_ops.fused_mlp_forward(
-                self._stacked_w, self._stacked_b, yp
-            )
-        else:
-            out = self._layered_kernel_forward(yp)
+        plan, cache_hit = self._plan_for_width(width)
+        out = plan.forward(yp)
         self._served += batch
         self._steps += 1
         stats = {
             "batch": batch,
-            "padded_batch": batch + pad,
-            "pad_slots": pad,
-            "grid_steps": dnn.dnn_grid_steps(self.weights, batch + pad),
+            "padded_batch": width,
+            "pad_slots": width - batch,
+            "grid_steps": plan.grid_steps,
             "request_ids": ids,
             "resident": self._resident,
             "differentiable": self.differentiable,
-            "pallas_calls": pallas_calls,
+            "pallas_calls": plan.pallas_calls,
             "served_total": self._served,
             "engine_steps": self._steps,
+            "plan": {
+                "width_class": width,
+                "cache_hit": cache_hit,
+                "route": plan.route,
+                "compiles": plan.compile_count,
+            },
         }
         return out[:, :batch], stats
 

@@ -153,6 +153,8 @@ class StepRecord:
     grid_steps: int  # exact kernel grid steps billed for the panel
     pallas_calls: int
     resident: bool
+    width_class: int | None = None  # plan width the panel compiled at
+    plan_cache_hit: bool | None = None  # compiled-plan reuse vs build
 
 
 @dataclasses.dataclass
@@ -180,6 +182,13 @@ class ServeStats:
     deadline_misses: int
     latencies: dict[int, int]  # rid → ticks from arrival to completion
     steps: list[StepRecord]
+    # Compiled-plan accounting (repro.plan): how many engine steps
+    # rebuilt/recompiled a plan, per width class — with width-class
+    # quantization a handful of classes should absorb every panel.
+    plan_recompiles_by_class: dict[int, int] = dataclasses.field(
+        default_factory=dict
+    )
+    plan_cache_hit_rate: float = 0.0
 
     @classmethod
     def from_steps(
@@ -192,6 +201,20 @@ class ServeStats:
         rows = sum(s.occupancy for s in steps)
         padded = sum(s.padded_width for s in steps)
         lat = sorted(latencies.values())
+        recompiles: dict[int, int] = {}
+        plan_lookups = plan_hits = 0
+        for s in steps:
+            if s.plan_cache_hit is None:
+                continue
+            plan_lookups += 1
+            if s.plan_cache_hit:
+                plan_hits += 1
+            else:
+                cls_w = (
+                    s.width_class if s.width_class is not None
+                    else s.padded_width
+                )
+                recompiles[cls_w] = recompiles.get(cls_w, 0) + 1
         return cls(
             requests=len(latencies),
             engine_steps=len(steps),
@@ -209,6 +232,10 @@ class ServeStats:
             deadline_misses=deadline_misses,
             latencies=dict(latencies),
             steps=list(steps),
+            plan_recompiles_by_class=recompiles,
+            plan_cache_hit_rate=(
+                plan_hits / plan_lookups if plan_lookups else 0.0
+            ),
         )
 
     def summary(self) -> dict:
@@ -226,6 +253,11 @@ class ServeStats:
             "latency_p50": self.latency_p50,
             "latency_max": self.latency_max,
             "deadline_misses": self.deadline_misses,
+            "plan_recompiles_by_class": {
+                str(k): v
+                for k, v in sorted(self.plan_recompiles_by_class.items())
+            },
+            "plan_cache_hit_rate": self.plan_cache_hit_rate,
         }
 
 
@@ -241,6 +273,15 @@ class ContinuousBatcher:
       request has waited ``max_wait`` ticks yet. ``min_fill=0`` serves
       every tick (latency-optimal); raising it trades bounded latency
       (≤ ``max_wait`` + 1 ticks) for fuller, less-padded panels.
+    * ``width_classes`` — quantize each panel's width UP to the smallest
+      listed class before dispatch (``repro.plan.quantize_width``). A
+      few classes absorb every occupancy the trace produces, so the
+      engine's :class:`repro.plan.PlanCache` compiles a handful of
+      plans once and reuses them — instead of recompiling on every new
+      panel width. The extra pad slots are billed honestly
+      (``pad_slot_fraction`` sees them); ``None`` disables quantization
+      (pad to the kernel tile only). Per-class recompile counts land in
+      :class:`ServeStats`.
 
     The batcher owns the clock: one ``step()`` = one tick. Completed
     requests' outputs are available via :meth:`result`.
@@ -254,6 +295,7 @@ class ContinuousBatcher:
         min_fill: float = 0.0,
         max_wait: int = 4,
         age_every: int = 8,
+        width_classes: Sequence[int] | None = None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -261,10 +303,21 @@ class ContinuousBatcher:
             raise ValueError("min_fill must be in [0, 1]")
         if engine.staged:
             raise ValueError("engine already has staged columns")
+        if width_classes is not None:
+            width_classes = tuple(sorted(int(c) for c in width_classes))
+            if not width_classes or min(width_classes) < 1:
+                raise ValueError("width_classes must be positive ints")
+            if max(width_classes) < batch_size:
+                raise ValueError(
+                    f"largest width class {max(width_classes)} is below "
+                    f"batch_size {batch_size}; full panels would spill "
+                    "past every class"
+                )
         self.engine = engine
         self.batch_size = batch_size
         self.min_fill = min_fill
         self.max_wait = max_wait
+        self.width_classes = width_classes
         self.queue = RequestQueue(age_every=age_every)
         self._tick = 0
         self._idle_ticks = 0
@@ -322,13 +375,19 @@ class ContinuousBatcher:
             batch = self.queue.pop_batch(self.batch_size, self._tick)
             cols = jax.numpy.stack([r.features for r in batch], axis=1)
             self.engine.submit(cols, request_ids=[r.rid for r in batch])
-            out, estats = self.engine.step()
+            pad_to = None
+            if self.width_classes is not None:
+                from repro.plan import quantize_width
+
+                pad_to = quantize_width(len(batch), self.width_classes)
+            out, estats = self.engine.step(pad_to=pad_to)
             done_tick = self._tick + 1  # service completes at tick end
             for j, req in enumerate(batch):
                 self._results[req.rid] = out[:, j]
                 self._latencies[req.rid] = done_tick - req.arrival
                 if req.deadline is not None and done_tick > req.deadline:
                     self._deadline_misses += 1
+            plan_stats = estats.get("plan") or {}
             record = StepRecord(
                 tick=self._tick,
                 request_ids=tuple(r.rid for r in batch),
@@ -337,6 +396,8 @@ class ContinuousBatcher:
                 grid_steps=estats["grid_steps"],
                 pallas_calls=estats["pallas_calls"],
                 resident=estats["resident"],
+                width_class=plan_stats.get("width_class"),
+                plan_cache_hit=plan_stats.get("cache_hit"),
             )
             self._steps.append(record)
         else:
@@ -438,6 +499,7 @@ def serve_trace_static(
         rid += len(arrivals)
         for r in ids:
             latencies[r] = 1  # served the tick it arrived
+        plan_stats = estats.get("plan") or {}
         steps.append(
             StepRecord(
                 tick=t,
@@ -447,6 +509,8 @@ def serve_trace_static(
                 grid_steps=estats["grid_steps"],
                 pallas_calls=estats["pallas_calls"],
                 resident=estats["resident"],
+                width_class=plan_stats.get("width_class"),
+                plan_cache_hit=plan_stats.get("cache_hit"),
             )
         )
     return ServeStats.from_steps(steps, latencies, 0, idle_ticks=0)

@@ -1,5 +1,17 @@
 from repro.sparse.bsr import BlockSparseMatrix
-from repro.sparse.bcsr import BlockCSRMatrix
+from repro.sparse.bcsr import (
+    BcsrTransposePlan,
+    BlockCSRMatrix,
+    reset_transpose_sort_count,
+    transpose_sort_count,
+)
 from repro.sparse import ops
 
-__all__ = ["BlockSparseMatrix", "BlockCSRMatrix", "ops"]
+__all__ = [
+    "BlockSparseMatrix",
+    "BlockCSRMatrix",
+    "BcsrTransposePlan",
+    "transpose_sort_count",
+    "reset_transpose_sort_count",
+    "ops",
+]

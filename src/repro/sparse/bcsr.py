@@ -45,6 +45,75 @@ from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
 
+# How many times a block-CSR topology has been *sorted* (the O(T log T)
+# argsort behind ``transpose``/``transpose_plan``) since the last reset.
+# The plan layer (``repro.plan``) amortizes this to once per topology:
+# tests and the benchmark's ``plan`` arm assert a multi-step train loop
+# increments it exactly once (at plan build), never per backward pass.
+_transpose_sort_count = 0
+
+
+def transpose_sort_count() -> int:
+    """Process-wide count of topology sorts (trace-time invocations)."""
+    return _transpose_sort_count
+
+
+def reset_transpose_sort_count() -> None:
+    global _transpose_sort_count
+    _transpose_sort_count = 0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BcsrTransposePlan:
+    """The sorted layout + permutation of a block-CSR transpose.
+
+    Everything here is **topology-only** (int/bool leaves — no values),
+    so the plan stays valid across training steps that update the stored
+    block values but keep the pattern frozen. :meth:`apply` rebuilds the
+    transposed matrix from fresh values with a single gather — no
+    re-sort. Built once per topology by
+    :meth:`BlockCSRMatrix.transpose_plan`; consumed by the backward rule
+    in ``repro.kernels.autodiff`` and carried by ``repro.plan``.
+    """
+
+    order: Array  # (T,) int32 — permutation into transposed CSR order
+    row_ptr: Array  # (ncb + 1,) int32 over valid transposed blocks
+    row_id: Array  # (T,) int32 — transposed block-row per slot
+    col_idx: Array  # (T,) int32 — transposed block-col per slot
+    valid: Array  # (T,) bool
+    shape: Tuple[int, int]  # shape of the TRANSPOSED matrix
+    block_shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (
+            (self.order, self.row_ptr, self.row_id, self.col_idx, self.valid),
+            (self.shape, self.block_shape),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        order, row_ptr, row_id, col_idx, valid = children
+        shape, block_shape = aux
+        return cls(order, row_ptr, row_id, col_idx, valid, shape, block_shape)
+
+    def apply(self, a: "BlockCSRMatrix") -> "BlockCSRMatrix":
+        """Transpose ``a`` through the cached permutation (gather only).
+
+        ``a`` must share the topology the plan was built from; only its
+        ``values`` are read — fully jittable, no sort anywhere.
+        """
+        values_t = jnp.swapaxes(a.values[self.order], -1, -2)
+        return BlockCSRMatrix(
+            jnp.where(self.valid[:, None, None], values_t, 0),
+            self.row_ptr,
+            self.row_id,
+            self.col_idx,
+            self.valid,
+            self.shape,
+            self.block_shape,
+        )
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -256,17 +325,20 @@ class BlockCSRMatrix:
             self.block_shape,
         )
 
-    def transpose(self) -> "BlockCSRMatrix":
-        """Device-side, fully jittable transpose: re-sort the stored
-        blocks into the transposed CSR order (``total_blocks`` is static,
-        so — unlike the ELL layout — no output pad width is needed).
+    def transpose_plan(self) -> BcsrTransposePlan:
+        """Sort the topology into transposed CSR order ONCE and return
+        the reusable :class:`BcsrTransposePlan` (permutation + transposed
+        index arrays, no values). This is the only place the transpose's
+        argsort runs — ``transpose_sort_count`` tracks invocations so the
+        amortization is testable.
 
         Invalid tail slots sort to the end (they keep their inert role);
         their ``row_id`` is pinned to the last valid block's row so the
         kernels' flush logic stays sound.
         """
+        global _transpose_sort_count
+        _transpose_sort_count += 1
         ncb = self.n_col_blocks
-        total = self.total_blocks
         # Stable sort by (valid first, new row = old col); stability keeps
         # old rows (= new cols) ascending within each new row.
         order = jnp.argsort(
@@ -275,7 +347,6 @@ class BlockCSRMatrix:
         new_row = self.col_idx[order]
         new_col = self.row_id[order]
         new_valid = self.valid[order]
-        values_t = jnp.swapaxes(self.values[order], -1, -2)
 
         counts = (
             jnp.zeros((ncb,), jnp.int32)
@@ -291,8 +362,8 @@ class BlockCSRMatrix:
         last_row = new_row[jnp.maximum(nnz - 1, 0)]
         new_row = jnp.where(new_valid, new_row, last_row)
         new_col = jnp.where(new_valid, new_col, 0)
-        return BlockCSRMatrix(
-            jnp.where(new_valid[:, None, None], values_t, 0),
+        return BcsrTransposePlan(
+            order,
             row_ptr,
             new_row,
             new_col,
@@ -300,6 +371,17 @@ class BlockCSRMatrix:
             (self.shape[1], self.shape[0]),
             (self.block_shape[1], self.block_shape[0]),
         )
+
+    def transpose(self) -> "BlockCSRMatrix":
+        """Device-side, fully jittable transpose: re-sort the stored
+        blocks into the transposed CSR order (``total_blocks`` is static,
+        so — unlike the ELL layout — no output pad width is needed).
+
+        Sorts on every call; when the topology is frozen across calls
+        (training loops), build :meth:`transpose_plan` once and
+        ``plan.apply(self)`` instead — same result, gather only.
+        """
+        return self.transpose_plan().apply(self)
 
     def to_dense(self) -> Array:
         m, n = self.shape

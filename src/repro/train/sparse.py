@@ -50,6 +50,7 @@ def make_sparse_train_step(
     *,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    plan=None,
 ):
     """step(state, batch) -> (state, metrics) for the sparse-MLP stack.
 
@@ -58,12 +59,20 @@ def make_sparse_train_step(
     ``use_kernel=True`` puts the Pallas kernels (and their custom VJPs)
     in the hot path; ``False`` uses the jnp oracle forms (same math,
     XLA autodiff) for CPU-bound runs. jit-able either way.
+
+    ``plan``: a differentiable :class:`repro.plan.StackPlan` for the
+    state's topology (``repro.plan.build_plan(weights, biases, n,
+    differentiable=True)``). Its cached block-CSR transposes make every
+    backward pass sort-free: the frozen topology is sorted exactly once,
+    at plan build, instead of once per step — the GraphChallenge
+    amortization applied to training.
     """
 
     def loss_fn(params, batch):
         weights, biases = params
         out = dnn.dnn_forward_trainable(
-            weights, biases, batch["y0"], use_kernel=use_kernel, interpret=interpret
+            weights, biases, batch["y0"], use_kernel=use_kernel,
+            interpret=interpret, plan=plan,
         )
         return 0.5 * jnp.mean((out - batch["targets"]) ** 2)
 

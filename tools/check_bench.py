@@ -20,7 +20,9 @@ Sections whose generator parameters differ from the baseline (e.g. a
 full run compared against the quick baseline) are reported as SKIP, not
 failed — the gate only compares like with like. Baseline topologies must
 all be present in the fresh artifact (the quick grid is a subset of the
-full grid).
+full grid). An arm present in the fresh artifact but ABSENT from the
+baseline (a newly added arm, mid-PR) is a warn + SKIP, never a crash:
+the gate keeps passing until the baseline is refreshed to cover it.
 
 Run from the repo root:
   PYTHONPATH=src python -m benchmarks.kernel_bench --quick
@@ -57,6 +59,17 @@ PARAMS = {
         "max_wait",
         "trace",
     ),
+    "plan": (
+        "m",
+        "layers",
+        "blocks_per_row",
+        "requests",
+        "batch_size",
+        "tile_align",
+        "width_classes",
+        "trace",
+        "train_params",
+    ),
 }
 
 EXACT = {
@@ -75,6 +88,30 @@ EXACT = {
         "loss_decreased",
     ),
 }
+# Plan arm (compiled execution plans): deterministic accounting checked
+# exactly, wall-clocks tolerantly, and the headline amortization gated.
+PLAN_SERVE_EXACT = (
+    "engine_steps",
+    "rows_served",
+    "padded_slots",
+    "pad_slot_fraction",
+    "grid_steps_total",
+    "plan_lookups",
+    "plan_builds",
+    "plan_evictions",
+    "cache_hit_rate",
+    "recompiles_by_class",
+)
+PLAN_TRAIN_EXACT = (
+    "layout_per_layer",
+    "csr_layers",
+    "sorts_at_plan_build",
+    "sorts_total",
+    "legacy_jaxpr_has_sort",
+    "planned_jaxpr_has_sort",
+    "loss_decreased",
+    "losses_match_legacy",
+)
 TOPOLOGY_EXACT = (
     "grid_steps_ell",
     "grid_steps_csr",
@@ -161,6 +198,34 @@ def _params_match(section: str, base: dict, fresh: dict) -> bool:
     return all(base.get(k) == fresh.get(k) for k in PARAMS[section])
 
 
+def _section_pair(gate: Gate, section: str, baseline: dict, fresh: dict):
+    """(baseline_arm, fresh_arm) when comparable, else None.
+
+    A fresh arm with no baseline counterpart is a newly added arm: warn
+    and SKIP so adding an arm never breaks the gate mid-PR (refresh the
+    baseline to start gating it). A baseline arm MISSING from the fresh
+    artifact is a real regression and fails.
+    """
+    bs, fs = baseline.get(section), fresh.get(section)
+    if bs is None:
+        if fs is not None:
+            gate.skip(section, "absent from baseline (new arm?)")
+            print(
+                f"warning: section {section!r} is in the fresh artifact "
+                "but not the baseline — skipping; refresh the baseline "
+                "to gate it",
+                file=sys.stderr,
+            )
+        return None
+    if fs is None:
+        gate.missing(section, "section")
+        return None
+    if not _params_match(section, bs, fs):
+        gate.skip(section, "generator params differ from baseline")
+        return None
+    return bs, fs
+
+
 def check(baseline: dict, fresh: dict, tol: float) -> Gate:
     gate = Gate(tol)
 
@@ -185,63 +250,104 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
 
     # --- fused / train: exact counts when the generator params match ---
     for section in ("fused", "train"):
-        bs, fs = baseline.get(section), fresh.get(section)
-        if bs is None:
+        pair = _section_pair(gate, section, baseline, fresh)
+        if pair is None:
             continue
-        if fs is None:
-            gate.missing(section, "section")
-            continue
-        if not _params_match(section, bs, fs):
-            gate.skip(section, "generator params differ (quick vs full)")
-            continue
+        bs, fs = pair
         for field in EXACT[section]:
+            if field not in bs:
+                gate.skip(section, f"{field} absent from baseline")
+                continue
+            if field not in fs:
+                gate.missing(section, field)
+                continue
             gate.exact(section, field, bs[field], fs[field])
         for field, bt in bs.get("xla_time_s", {}).items():
-            gate.time(section, f"xla_time_s.{field}", bt, fs["xla_time_s"][field])
+            ft = fs.get("xla_time_s", {}).get(field)
+            if ft is None:
+                gate.missing(section, f"xla_time_s.{field}")
+                continue
+            gate.time(section, f"xla_time_s.{field}", bt, ft)
+
+    # --- plan: compiled-plan amortization (exact) + wall-clocks -------
+    pair = _section_pair(gate, "plan", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for sub, fields in (
+            ("serve", PLAN_SERVE_EXACT),
+            ("train", PLAN_TRAIN_EXACT),
+        ):
+            for field in fields:
+                bv = bs.get(sub, {}).get(field)
+                fv = fs.get(sub, {}).get(field)
+                if bv is None:
+                    # field newer than the committed baseline: warn+skip
+                    gate.skip(f"plan.{sub}", f"{field} absent from baseline")
+                    continue
+                if fv is None:
+                    gate.missing(f"plan.{sub}", field)
+                    continue
+                gate.exact(f"plan.{sub}", field, bv, fv)
+        # headline: the cache hit rate must never regress below baseline
+        hit_b = bs.get("serve", {}).get("cache_hit_rate")
+        hit_f = fs.get("serve", {}).get("cache_hit_rate", 0.0)
+        if hit_b is not None:
+            gate._add(
+                "plan",
+                "cache_hit_rate >= baseline",
+                hit_b,
+                hit_f,
+                "ok" if hit_f >= hit_b - 1e-9 else "FAIL",
+            )
+        wt_b = bs.get("serve", {}).get("wall_time_s")
+        wt_f = fs.get("serve", {}).get("wall_time_s")
+        if wt_b is not None and wt_f is not None:
+            gate.time("plan", "serve.wall_time_s", wt_b, wt_f)
+        for arm in ("legacy", "planned"):
+            st_b = bs.get("train", {}).get("step_time_s", {}).get(arm)
+            st_f = fs.get("train", {}).get("step_time_s", {}).get(arm)
+            if st_b is not None and st_f is not None:
+                gate.time("plan", f"train.step_time_s.{arm}", st_b, st_f)
 
     # --- serve: deterministic accounting exact, pad waste gated -------
-    bs, fs = baseline.get("serve"), fresh.get("serve")
-    if bs is not None:
-        if fs is None:
-            gate.missing("serve", "section")
-        elif not _params_match("serve", bs, fs):
-            gate.skip("serve", "trace/knobs differ from baseline")
-        else:
-            gate.exact(
-                "serve", "resident_path_used",
-                bs["resident_path_used"], fs["resident_path_used"],
-            )
-            for arm in ("static", "continuous"):
-                for field in SERVE_EXACT:
-                    gate.exact(
-                        f"serve.{arm}", field, bs[arm][field], fs[arm][field]
-                    )
-            # the headline guarantee: pad waste must not regress vs the
-            # baseline, and continuous must still beat static outright
-            gate.no_worse(
-                "serve",
-                "continuous.pad_slot_fraction",
-                bs["continuous"]["pad_slot_fraction"],
-                fs["continuous"]["pad_slot_fraction"],
-            )
-            strict = (
-                fs["continuous"]["pad_slot_fraction"]
-                < fs["static"]["pad_slot_fraction"]
-            )
-            gate._add(
-                "serve",
-                "continuous < static pad fraction",
-                fs["static"]["pad_slot_fraction"],
-                fs["continuous"]["pad_slot_fraction"],
-                "ok" if strict else "FAIL",
-            )
-            for arm in ("static", "continuous"):
-                gate.time(
-                    "serve",
-                    f"wall_time_s.{arm}",
-                    bs["wall_time_s"][arm],
-                    fs["wall_time_s"][arm],
+    pair = _section_pair(gate, "serve", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        gate.exact(
+            "serve", "resident_path_used",
+            bs["resident_path_used"], fs["resident_path_used"],
+        )
+        for arm in ("static", "continuous"):
+            for field in SERVE_EXACT:
+                gate.exact(
+                    f"serve.{arm}", field, bs[arm][field], fs[arm][field]
                 )
+        # the headline guarantee: pad waste must not regress vs the
+        # baseline, and continuous must still beat static outright
+        gate.no_worse(
+            "serve",
+            "continuous.pad_slot_fraction",
+            bs["continuous"]["pad_slot_fraction"],
+            fs["continuous"]["pad_slot_fraction"],
+        )
+        strict = (
+            fs["continuous"]["pad_slot_fraction"]
+            < fs["static"]["pad_slot_fraction"]
+        )
+        gate._add(
+            "serve",
+            "continuous < static pad fraction",
+            fs["static"]["pad_slot_fraction"],
+            fs["continuous"]["pad_slot_fraction"],
+            "ok" if strict else "FAIL",
+        )
+        for arm in ("static", "continuous"):
+            gate.time(
+                "serve",
+                f"wall_time_s.{arm}",
+                bs["wall_time_s"][arm],
+                fs["wall_time_s"][arm],
+            )
     return gate
 
 

@@ -1,10 +1,11 @@
-"""Execute the README's ```python code fences (the CI docs job).
+"""Execute the ```python code fences of README.md and the docs pages
+listed in :data:`FENCED_DOCS` (the CI docs job).
 
-Fences share one namespace and run top-to-bottom, so the README can
-build up an example across fences. A fence whose first line is
-``# docs: no-run`` is skipped (for illustrative fragments). Exits
-nonzero on the first broken fence — a README whose quickstart doesn't
-run is a bug.
+Within one file, fences share one namespace and run top-to-bottom, so a
+page can build up an example across fences (namespaces do NOT leak
+between files). A fence whose first line is ``# docs: no-run`` is
+skipped (for illustrative fragments). Exits nonzero on the first broken
+fence — a page whose quickstart doesn't run is a bug.
 
 ``--examples`` additionally executes the quick-mode example scripts
 listed in :data:`QUICK_EXAMPLES` as subprocesses (same interpreter,
@@ -25,6 +26,12 @@ import sys
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 README = REPO_ROOT / "README.md"
 
+# Docs pages whose ```python fences must execute (relative to the repo
+# root; README.md is always checked and must contain fences).
+FENCED_DOCS = [
+    "docs/architecture.md",
+]
+
 # Example scripts with a fast deterministic mode, run by the CI docs job
 # (script path relative to the repo root, plus its quick-mode args).
 QUICK_EXAMPLES = [
@@ -32,23 +39,39 @@ QUICK_EXAMPLES = [
 ]
 
 
-def run_fences() -> int:
-    text = README.read_text()
+def run_file_fences(path: pathlib.Path, *, require: bool) -> int:
+    text = path.read_text()
+    rel = path.relative_to(REPO_ROOT)
     fences = re.findall(r"```python\n(.*?)```", text, re.S)
     if not fences:
-        print("error: README.md has no ```python fences to check", file=sys.stderr)
-        return 1
+        if require:
+            print(
+                f"error: {rel} has no ```python fences to check",
+                file=sys.stderr,
+            )
+            return 1
+        print(f"{rel}: no python fences")
+        return 0
     ns: dict = {}
     ran = 0
     for i, code in enumerate(fences, 1):
         if code.lstrip().startswith("# docs: no-run"):
-            print(f"-- fence {i}/{len(fences)}: skipped (no-run) --")
+            print(f"-- {rel} fence {i}/{len(fences)}: skipped (no-run) --")
             continue
-        print(f"-- fence {i}/{len(fences)} --", flush=True)
-        exec(compile(code, f"README.md#fence{i}", "exec"), ns)
+        print(f"-- {rel} fence {i}/{len(fences)} --", flush=True)
+        exec(compile(code, f"{rel}#fence{i}", "exec"), ns)
         ran += 1
-    print(f"README OK: {ran}/{len(fences)} python fences executed")
+    print(f"{rel} OK: {ran}/{len(fences)} python fences executed")
     return 0
+
+
+def run_fences() -> int:
+    rc = run_file_fences(README, require=True)
+    for doc in FENCED_DOCS:
+        if rc != 0:
+            break
+        rc = run_file_fences(REPO_ROOT / doc, require=False)
+    return rc
 
 
 def run_examples() -> int:
