@@ -45,6 +45,20 @@ track the trajectory:
           ``repro.sparse`` sort counter and a sort-free step jaxpr),
           with legacy-vs-planned per-step wall-clock recorded.
           Identical in --quick and full runs, like serve.
+  sharded: the SHARDING arm — the balanced block-CSR partitioner
+          (``repro.sparse.partition``) applied to a deterministic
+          benchmark stack: per-shard nnz and grid-step bills vs the
+          single-device occupancy-exact bill, the load-imbalance
+          factor, and the critical-path step count (the parallel
+          speedup bound). Pure host-side accounting — it needs no
+          multi-device runtime, so CI's single-CPU bench job gates it
+          exactly; the numerics are covered by tests/test_sharded.py
+          on an 8-host-device mesh.
+
+``--arms`` selects a comma-separated subset (e.g. ``--arms serve`` or
+``--arms topologies,sharded``) so CI and local runs can execute a
+single arm — the full suite is getting slow. Sections not run are
+absent from the JSON; the CI gate compares full artifacts only.
 
 See ``docs/benchmarks.md`` for the full field reference and how CI's
 benchmark smoke job consumes this file; ``tools/check_bench.py`` fails
@@ -517,164 +531,263 @@ def plan_arm(
     }
 
 
-def run(quick: bool = False):
+def sharded_arm(m: int, L: int, block: int, bpr: int, n: int, shards: int):
+    """The balanced block-CSR partitioner's accounting, deterministic.
+
+    Builds the benchmark stack (nnz divisible by ``shards`` so the
+    common per-shard segment length carries zero padding), partitions
+    every layer across ``shards`` row-block shards, and reports the
+    per-shard grid-step bill vs the single-device occupancy-exact bill
+    plus the load-imbalance factor. All host-side topology math — the
+    single-CPU CI bench job gates these numbers exactly; the multi-
+    device execution itself is validated by tests/test_sharded.py.
+    """
+    from repro.sparse import partition_block_csr
+
+    ws = [
+        BlockCSRMatrix.from_bsr(
+            BlockSparseMatrix.random(
+                jax.random.PRNGKey(500 + i), (m, m), (block, block),
+                blocks_per_row=bpr,
+            )
+        )
+        for i in range(L)
+    ]
+    from repro.plan import cost as plan_cost
+
+    parts = [partition_block_csr(w, shards) for w in ws]
+    # bill each shard through the SAME cost model ShardedStackPlan uses
+    # (one source of truth — a kernel tile-width change moves both)
+    per_shard = [
+        sum(plan_cost.layer_grid_steps(p.shard(s), n) for p in parts)
+        for s in range(shards)
+    ]
+    nnz_per_shard = [
+        int(sum(p.nnz_per_shard()[s] for p in parts)) for s in range(shards)
+    ]
+    unsharded = dnn.dnn_grid_steps(ws, n)
+    total = sum(per_shard)
+    pad_blocks = sum(
+        p.n_shards * p.local_total_blocks - int(p.nnz_per_shard().sum())
+        for p in parts
+    )
+    nnz_total = sum(nnz_per_shard)
+    imbalance = max(nnz_per_shard) * shards / nnz_total
+    critical_path = max(per_shard)
+    return {
+        "m": m,
+        "layers": L,
+        "block": block,
+        "blocks_per_row": bpr,
+        "n": n,
+        "shards": shards,
+        "nnz_blocks_total": nnz_total,
+        "nnz_per_shard": nnz_per_shard,
+        "grid_steps_unsharded": unsharded,
+        "grid_steps_per_shard": per_shard,
+        "grid_steps_sharded_total": total,
+        "shard_pad_blocks": pad_blocks,
+        "bill_matches_unsharded": total == unsharded,
+        "imbalance": imbalance,
+        "critical_path_steps": critical_path,
+        "parallel_speedup_bound": unsharded / critical_path,
+    }
+
+
+ALL_ARMS = ("topologies", "fused", "train", "serve", "plan", "sharded")
+
+
+def run(quick: bool = False, arms=None):
+    arms = set(ALL_ARMS) if arms is None else set(arms)
+    unknown = arms - set(ALL_ARMS)
+    if unknown:
+        raise SystemExit(
+            f"unknown arm(s) {sorted(unknown)}; choose from {ALL_ARMS}"
+        )
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_kernels": kernel_ops.auto_interpret(),
+        "quick": quick,
+    }
+
     n = 64
     sizes = [256] if quick else [256, 512, 1024]
     skews = [0.0, 0.9] if quick else [0.0, 0.5, 0.9]
     inv_sparsities = [8, 32] if quick else [8, 32, 128]
 
-    topologies = []
-    for m in sizes:
-        block = 16
-        ncb = m // block
-        for inv in inv_sparsities:
-            total = max((m // block) * max(ncb // inv, 1), 1)
-            for skew in skews:
-                r = topology_arms(m, block, total, skew, n)
-                topologies.append(r)
-                print(
-                    f"m={m:5d} inv={inv:4d} skew={skew:.1f}  "
-                    f"steps ell={r['grid_steps_ell']:6d} "
-                    f"csr={r['grid_steps_csr']:6d} "
-                    f"(ratio {r['step_ratio_ell_over_csr']:.2f})  "
-                    f"xla ell={r['xla_time_s']['ell']*1e3:7.2f}ms "
-                    f"csr={r['xla_time_s']['csr']*1e3:7.2f}ms "
-                    f"dense={r['xla_time_s']['dense']*1e3:7.2f}ms",
-                    flush=True,
-                )
+    if "topologies" in arms:
+        topologies = []
+        for m in sizes:
+            block = 16
+            ncb = m // block
+            for inv in inv_sparsities:
+                total = max((m // block) * max(ncb // inv, 1), 1)
+                for skew in skews:
+                    r = topology_arms(m, block, total, skew, n)
+                    topologies.append(r)
+                    print(
+                        f"m={m:5d} inv={inv:4d} skew={skew:.1f}  "
+                        f"steps ell={r['grid_steps_ell']:6d} "
+                        f"csr={r['grid_steps_csr']:6d} "
+                        f"(ratio {r['step_ratio_ell_over_csr']:.2f})  "
+                        f"xla ell={r['xla_time_s']['ell']*1e3:7.2f}ms "
+                        f"csr={r['xla_time_s']['csr']*1e3:7.2f}ms "
+                        f"dense={r['xla_time_s']['dense']*1e3:7.2f}ms",
+                        flush=True,
+                    )
+        # The tentpole invariant, asserted on every benchmark run:
+        for r in topologies:
+            if r["max_blocks_per_row"] > r["mean_blocks_per_row"]:
+                assert r["grid_steps_csr"] < r["grid_steps_ell"], r
+        payload["topologies"] = topologies
 
-    fused = fused_arm(m=256, L=4 if quick else 8, bpr=3, n=128)
-    print(
-        f"fused: L={fused['layers']} pallas_calls "
-        f"{fused['pallas_calls_layered']}→{fused['pallas_calls_fused']}, "
-        f"max rel err {fused['max_rel_err_vs_layered']:.2e}",
-        flush=True,
-    )
+    if "fused" in arms:
+        fused = fused_arm(m=256, L=4 if quick else 8, bpr=3, n=128)
+        print(
+            f"fused: L={fused['layers']} pallas_calls "
+            f"{fused['pallas_calls_layered']}→{fused['pallas_calls_fused']}, "
+            f"max rel err {fused['max_rel_err_vs_layered']:.2e}",
+            flush=True,
+        )
+        assert fused["pallas_calls_fused"] == 1
+        assert fused["max_rel_err_vs_layered"] <= 1e-5
+        payload["fused"] = fused
 
-    train = train_arm(
-        m=64 if quick else 128,
-        L=3,
-        block=16,
-        bpr=2,
-        n=32,
-        steps=3 if quick else 6,
-    )
-    print(
-        f"train: L={train['layers']} layouts={train['layout_per_layer']} "
-        f"pallas/step {train['pallas_calls_per_step']} "
-        f"(fwd-only would be {train['pallas_calls_forward_only']}), "
-        f"loss {train['losses'][0]:.4f}→{train['losses'][-1]:.4f}",
-        flush=True,
-    )
+    if "train" in arms:
+        train = train_arm(
+            m=64 if quick else 128,
+            L=3,
+            block=16,
+            bpr=2,
+            n=32,
+            steps=3 if quick else 6,
+        )
+        print(
+            f"train: L={train['layers']} layouts={train['layout_per_layer']} "
+            f"pallas/step {train['pallas_calls_per_step']} "
+            f"(fwd-only would be {train['pallas_calls_forward_only']}), "
+            f"loss {train['losses'][0]:.4f}→{train['losses'][-1]:.4f}",
+            flush=True,
+        )
+        # training arm: kernels in both passes, learning, sparsity kept
+        assert train["loss_decreased"], train["losses"]
+        assert train["weight_cotangent_pattern_preserved"]
+        assert (
+            train["pallas_calls_per_step"] > train["pallas_calls_forward_only"]
+        )
+        payload["train"] = train
 
-    # Serving arm: SAME trace + knobs in quick and full runs, so the CI
-    # gate's baseline comparison is always like-for-like.
-    serve = serve_arm(
-        m=64,
-        L=3,
-        bpr=2,
-        n_requests=100,
-        batch_size=32,
-        tile_align=8,
-        lam=3.0,
-        burst_every=8,
-        burst_size=12,
-        seed=7,
-        min_fill=0.25,
-        max_wait=3,
-    )
-    print(
-        f"serve: {serve['requests']} reqs over {serve['trace']['ticks']} "
-        f"ticks  pad-frac static={serve['static']['pad_slot_fraction']:.3f} "
-        f"continuous={serve['continuous']['pad_slot_fraction']:.3f}  "
-        f"grid steps {serve['static']['grid_steps_total']}"
-        f"→{serve['continuous']['grid_steps_total']}  "
-        f"latency p50/max "
-        f"{serve['continuous']['latency_p50']:.0f}/"
-        f"{serve['continuous']['latency_max']} ticks",
-        flush=True,
-    )
+    if "serve" in arms:
+        # Serving arm: SAME trace + knobs in quick and full runs, so the
+        # CI gate's baseline comparison is always like-for-like.
+        serve = serve_arm(
+            m=64,
+            L=3,
+            bpr=2,
+            n_requests=100,
+            batch_size=32,
+            tile_align=8,
+            lam=3.0,
+            burst_every=8,
+            burst_size=12,
+            seed=7,
+            min_fill=0.25,
+            max_wait=3,
+        )
+        print(
+            f"serve: {serve['requests']} reqs over {serve['trace']['ticks']} "
+            f"ticks  pad-frac static={serve['static']['pad_slot_fraction']:.3f} "
+            f"continuous={serve['continuous']['pad_slot_fraction']:.3f}  "
+            f"grid steps {serve['static']['grid_steps_total']}"
+            f"→{serve['continuous']['grid_steps_total']}  "
+            f"latency p50/max "
+            f"{serve['continuous']['latency_p50']:.0f}/"
+            f"{serve['continuous']['latency_max']} ticks",
+            flush=True,
+        )
+        # serving arm: every request served, the resident path engaged,
+        # and continuous batching strictly beats static aligned batching
+        # on pad waste AND total kernel grid steps for the same trace
+        assert serve["static"]["requests"] == serve["requests"]
+        assert serve["continuous"]["requests"] == serve["requests"]
+        assert serve["resident_path_used"]
+        assert (
+            serve["continuous"]["pad_slot_fraction"]
+            < serve["static"]["pad_slot_fraction"]
+        ), serve
+        assert (
+            serve["continuous"]["grid_steps_total"]
+            < serve["static"]["grid_steps_total"]
+        ), serve
+        payload["serve"] = serve
 
-    # Plan arm: same trace as serve, width-class quantized; plus the
-    # cached-transpose train loop. Identical in quick and full runs.
-    plan = plan_arm(
-        m=64,
-        L=3,
-        bpr=2,
-        n_requests=100,
-        batch_size=32,
-        tile_align=8,
-        lam=3.0,
-        burst_every=8,
-        burst_size=12,
-        seed=7,
-        width_classes=(16, 32),
-        train_n=32,
-        train_steps=12,
-    )
-    print(
-        f"plan: serve {plan['serve']['engine_steps']} steps, "
-        f"{plan['serve']['plan_builds']} compiled plans, hit rate "
-        f"{plan['serve']['cache_hit_rate']:.3f}  "
-        f"train sorts {plan['train']['sorts_total']} "
-        f"(csr layers {plan['train']['csr_layers']}), "
-        f"step {plan['train']['step_time_s']['legacy']*1e3:.1f}ms"
-        f"→{plan['train']['step_time_s']['planned']*1e3:.1f}ms",
-        flush=True,
-    )
+    if "plan" in arms:
+        # Plan arm: same trace as serve, width-class quantized; plus the
+        # cached-transpose train loop. Identical in quick and full runs.
+        plan = plan_arm(
+            m=64,
+            L=3,
+            bpr=2,
+            n_requests=100,
+            batch_size=32,
+            tile_align=8,
+            lam=3.0,
+            burst_every=8,
+            burst_size=12,
+            seed=7,
+            width_classes=(16, 32),
+            train_n=32,
+            train_steps=12,
+        )
+        print(
+            f"plan: serve {plan['serve']['engine_steps']} steps, "
+            f"{plan['serve']['plan_builds']} compiled plans, hit rate "
+            f"{plan['serve']['cache_hit_rate']:.3f}  "
+            f"train sorts {plan['train']['sorts_total']} "
+            f"(csr layers {plan['train']['csr_layers']}), "
+            f"step {plan['train']['step_time_s']['legacy']*1e3:.1f}ms"
+            f"→{plan['train']['step_time_s']['planned']*1e3:.1f}ms",
+            flush=True,
+        )
+        # plan arm: the PlanCache demonstrably amortizes — ≥ 90 % hit
+        # rate on the 100-request trace with a handful of compiled width
+        # classes, and the planned train loop sorts the frozen topology
+        # exactly once (at plan build; the loop itself is sort-free).
+        assert plan["serve"]["cache_hit_rate"] >= 0.9, plan["serve"]
+        assert plan["serve"]["plan_builds"] <= len(plan["width_classes"]), plan
+        assert plan["serve"]["rows_served"] == plan["requests"]
+        assert (
+            plan["train"]["sorts_total"]
+            == plan["train"]["sorts_at_plan_build"]
+            == plan["train"]["csr_layers"]
+            == 1
+        ), plan["train"]
+        assert plan["train"]["legacy_jaxpr_has_sort"], plan["train"]
+        assert not plan["train"]["planned_jaxpr_has_sort"], plan["train"]
+        assert plan["train"]["loss_decreased"], plan["train"]
+        assert plan["train"]["losses_match_legacy"], plan["train"]
+        payload["plan"] = plan
 
-    # The tentpole invariants, asserted on every benchmark run:
-    for r in topologies:
-        if r["max_blocks_per_row"] > r["mean_blocks_per_row"]:
-            assert r["grid_steps_csr"] < r["grid_steps_ell"], r
-    assert fused["pallas_calls_fused"] == 1
-    assert fused["max_rel_err_vs_layered"] <= 1e-5
-    # training arm: kernels in both passes, learning, sparsity preserved
-    assert train["loss_decreased"], train["losses"]
-    assert train["weight_cotangent_pattern_preserved"]
-    assert train["pallas_calls_per_step"] > train["pallas_calls_forward_only"]
-    # serving arm: every request served, the resident path engaged, and
-    # continuous batching strictly beats static aligned batching on pad
-    # waste AND total kernel grid steps for the same trace
-    assert serve["static"]["requests"] == serve["requests"]
-    assert serve["continuous"]["requests"] == serve["requests"]
-    assert serve["resident_path_used"]
-    assert (
-        serve["continuous"]["pad_slot_fraction"]
-        < serve["static"]["pad_slot_fraction"]
-    ), serve
-    assert (
-        serve["continuous"]["grid_steps_total"]
-        < serve["static"]["grid_steps_total"]
-    ), serve
-    # plan arm: the PlanCache demonstrably amortizes — ≥ 90 % hit rate
-    # on the 100-request trace with a handful of compiled width classes,
-    # and the planned train loop sorts the frozen topology exactly once
-    # (at plan build; the multi-step loop itself is sort-free).
-    assert plan["serve"]["cache_hit_rate"] >= 0.9, plan["serve"]
-    assert plan["serve"]["plan_builds"] <= len(plan["width_classes"]), plan
-    assert plan["serve"]["rows_served"] == plan["requests"]
-    assert (
-        plan["train"]["sorts_total"]
-        == plan["train"]["sorts_at_plan_build"]
-        == plan["train"]["csr_layers"]
-        == 1
-    ), plan["train"]
-    assert plan["train"]["legacy_jaxpr_has_sort"], plan["train"]
-    assert not plan["train"]["planned_jaxpr_has_sort"], plan["train"]
-    assert plan["train"]["loss_decreased"], plan["train"]
-    assert plan["train"]["losses_match_legacy"], plan["train"]
+    if "sharded" in arms:
+        # Sharding arm: fixed stack in quick AND full runs (like serve),
+        # nnz divisible by the shard count → exact bill equality.
+        sharded = sharded_arm(m=128, L=3, block=16, bpr=4, n=64, shards=8)
+        print(
+            f"sharded: {sharded['shards']} shards over "
+            f"{sharded['nnz_blocks_total']} nnz blocks  "
+            f"bill {sharded['grid_steps_unsharded']}"
+            f"→max/shard {sharded['critical_path_steps']} "
+            f"(speedup bound {sharded['parallel_speedup_bound']:.2f}x)  "
+            f"imbalance {sharded['imbalance']:.3f}",
+            flush=True,
+        )
+        # sharding arm: per-shard bills sum EXACTLY to the unsharded
+        # occupancy-exact bill, and the partitioner stays balanced
+        assert sharded["bill_matches_unsharded"], sharded
+        assert sharded["shard_pad_blocks"] == 0, sharded
+        assert sharded["imbalance"] <= 1.10, sharded
+        payload["sharded"] = sharded
 
-    payload = {
-        "backend": jax.default_backend(),
-        "interpret_kernels": kernel_ops.auto_interpret(),
-        "quick": quick,
-        "topologies": topologies,
-        "fused": fused,
-        "train": train,
-        "serve": serve,
-        "plan": plan,
-    }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {OUT_PATH}")
@@ -684,8 +797,16 @@ def run(quick: bool = False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--arms",
+        default=None,
+        help="comma-separated subset of arms to run "
+        f"({','.join(ALL_ARMS)}; default: all). Partial artifacts are "
+        "for local iteration — the CI gate compares full runs.",
+    )
     args = ap.parse_args()
-    run(quick=args.quick)
+    arms = None if args.arms is None else args.arms.split(",")
+    run(quick=args.quick, arms=arms)
 
 
 if __name__ == "__main__":

@@ -17,23 +17,59 @@ columns are hardware-independent: the pad columns of every underfull
 static batch ride through all L layers' kernel grids, which is exactly
 the work the scheduler removes.
 
-Run: PYTHONPATH=src python examples/serve_stream.py [--quick]
-Docs: docs/serving.md (design), docs/benchmarks.md (serve arm fields).
+``--shards N`` serves the same trace through a mesh-sharded engine
+(``SparseDNNEngine(mesh=...)``): every layer's block-CSR segment is
+partitioned across N row-block shards (``repro.sparse.partition``) and
+executed under shard_map with a psum between layers — outputs are
+identical, and the step stats grow per-shard grid-step bills that sum
+to the single-device bill. On CPU hosts the flag fakes N host devices
+(it must run before the first jax import, which is why it is parsed
+early below).
+
+Run: PYTHONPATH=src python examples/serve_stream.py [--quick] [--shards N]
+Docs: docs/serving.md (design), docs/architecture.md (Distribution),
+docs/benchmarks.md (serve/sharded arm fields).
 """
 
 import argparse
+import os
+import sys
+
+
+def _early_shards() -> int:
+    """Read --shards before the first jax import: fake host devices
+    only materialize if XLA_FLAGS is set at process start."""
+    for i, a in enumerate(sys.argv):
+        if a == "--shards" and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith("--shards="):
+            return int(a.split("=", 1)[1])
+    return 1
+
+
+_SHARDS = _early_shards()
+if _SHARDS > 1:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    # Append to (never clobber) whatever XLA_FLAGS the user already has;
+    # an explicit device-count flag from the caller wins.
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (_flags + " " if _flags else "") + (
+            f"--xla_force_host_platform_device_count={_SHARDS}"
+        )
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dnn
+from repro.launch.mesh import make_row_blocks_mesh
 from repro.serve import (
     ContinuousBatcher,
     SparseDNNEngine,
     poissonish_trace,
     serve_trace_static,
 )
+from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
 
@@ -72,12 +108,20 @@ def main():
     ap.add_argument("--max-wait", type=int, default=3)
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument(
+        "--shards",
+        type=int,
+        default=1,
+        help="serve mesh-sharded over N row-block shards (fakes N host "
+        "devices on CPU; parsed before the jax import)",
+    )
+    ap.add_argument(
         "--quick", action="store_true", help="small shapes for CI (seconds)"
     )
     args = ap.parse_args()
     if args.quick:
         args.m, args.layers, args.requests = 32, 2, 30
 
+    mesh = make_row_blocks_mesh(args.shards) if args.shards > 1 else None
     ws, bs = build_stack(args.m, args.layers, args.blocks_per_row)
     trace = poissonish_trace(
         args.requests,
@@ -95,11 +139,18 @@ def main():
     )
     print(f"arrivals/tick: {counts}")
 
+    if mesh is not None:
+        print(
+            f"mesh-sharded serving: {args.shards} row-block shards over "
+            f"{len(jax.devices())} host devices"
+        )
     static = serve_trace_static(
-        SparseDNNEngine(ws, bs, batch_align=args.batch_size), trace
+        SparseDNNEngine(ws, bs, batch_align=args.batch_size, mesh=mesh),
+        trace,
     )
+    engine = SparseDNNEngine(ws, bs, batch_align=args.tile_align, mesh=mesh)
     batcher = ContinuousBatcher(
-        SparseDNNEngine(ws, bs, batch_align=args.tile_align),
+        engine,
         batch_size=args.batch_size,
         min_fill=args.min_fill,
         max_wait=args.max_wait,
@@ -117,7 +168,32 @@ def main():
         f"{continuous.latency_mean - static.latency_mean:.2f} ticks mean."
     )
 
+    if mesh is not None:
+        # one probe panel to surface the per-shard grid-step accounting;
+        # compare against the INDEPENDENTLY computed single-device
+        # occupancy-exact bill of the (relayouted) CSR stack — when the
+        # shard count divides the stored blocks the two are equal, else
+        # the per-shard segment padding shows up as extra steps
+        _, pstats = engine.infer(trace[0][0][:, None])
+        per = pstats["plan"]["grid_steps_per_shard"]
+        total = sum(per)
+        csr_ws = [BlockCSRMatrix.from_bsr(w) for w in ws]
+        expected = dnn.dnn_grid_steps(csr_ws, pstats["padded_batch"])
+        note = (
+            f"= the single-device bill {expected}"
+            if total == expected
+            else f"vs single-device bill {expected}: "
+            f"+{total - expected} shard-padding steps"
+        )
+        print(
+            f"\nper-shard grid-step bill for one "
+            f"{pstats['padded_batch']}-wide panel: {per} (Σ = {total} "
+            f"{note})"
+        )
+        assert total >= expected and total == pstats["grid_steps"]
+
     # spot-check: the batcher's per-request outputs are the real forward
+    # (for --shards > 1 this also proves sharded == single-device math)
     ref = dnn.dnn_forward(ws, bs, trace[0][0][:, None], fused=True)[:, 0]
     np.testing.assert_allclose(
         np.asarray(batcher.result(0)), np.asarray(ref), rtol=1e-5, atol=1e-5

@@ -108,6 +108,20 @@ def dnn_grid_steps(
     return _plan_cost.stack_grid_steps(weights, n, block_n=block_n)
 
 
+def _sharded_plan_forward(
+    weights: Sequence[Weight], biases: Sequence[Array], y0: Array, mesh
+) -> Array:
+    """The one mesh dispatch both forward wrappers share: fetch the
+    mesh-sharded plan for this panel width from the shared default
+    cache and run its shard_map executable."""
+    from repro.plan import default_cache
+
+    plan = default_cache().get(
+        weights, biases, max(y0.shape[1], 1), mesh=mesh
+    )
+    return plan.forward(y0)
+
+
 def dnn_layer(w: Weight, y: Array, b: Array, *, fused: bool = True) -> Array:
     """One forward layer: max(W·Y + b⊗1ᵀ, 0).  y: (m, n); b: (m,)."""
     if fused:
@@ -131,8 +145,19 @@ def dnn_forward(
     y0: Array,
     *,
     fused: bool = True,
+    mesh=None,
 ) -> Array:
-    """Full L-layer forward pass (the paper's ``dnn()`` function)."""
+    """Full L-layer forward pass (the paper's ``dnn()`` function).
+
+    ``mesh``: run the stack mesh-sharded — every sparse layer's
+    block-CSR segment is partitioned across the mesh's ``row_blocks``
+    axes and executed under ``shard_map`` with a psum between layers
+    (``repro.plan.ShardedStackPlan``, fetched through the shared
+    :func:`repro.plan.default_cache`). Single-device semantics are
+    unchanged when ``mesh`` is None (the default).
+    """
+    if mesh is not None:
+        return _sharded_plan_forward(weights, biases, y0, mesh)
     y = y0
     for w, b in zip(weights, biases):
         y = dnn_layer(w, y, b, fused=fused)
@@ -179,6 +204,7 @@ def dnn_forward_resident(
     *,
     block_n: int = 128,
     interpret: bool | None = None,
+    mesh=None,
 ) -> Array:
     """L-layer forward with the activation panel resident in VMEM.
 
@@ -196,7 +222,13 @@ def dnn_forward_resident(
     traced ``y0`` means someone is differentiating or vmapping through
     this forward-only wrapper — the inline fallback keeps the legacy
     XLA-differentiable behaviour for ineligible stacks).
+
+    ``mesh`` overrides residency entirely: the VMEM-resident kernel is
+    single-device, so a mesh routes through the sharded layered plan
+    (``repro.plan.ShardedStackPlan``) exactly like ``dnn_forward``.
     """
+    if mesh is not None:
+        return _sharded_plan_forward(weights, biases, y0, mesh)
     if (
         block_n == 128
         and interpret is None
@@ -282,8 +314,16 @@ def dnn_forward_trainable(
     ``plan``: a differentiable :class:`repro.plan.StackPlan` built for
     this topology. Its cached block-CSR transposes make the backward
     sort-free — the frozen topology is sorted once at plan build, not
-    once per backward pass.
+    once per backward pass. A :class:`repro.plan.ShardedStackPlan`
+    routes the whole forward (and its backward) through the mesh-
+    sharded shard_map executable instead — fresh values re-shard
+    through the plan's frozen partition, cotangents keep the caller's
+    unsharded layout.
     """
+    if plan is not None and getattr(plan, "is_sharded", False):
+        return plan.forward_trainable(
+            weights, biases, y0, use_kernel=use_kernel, interpret=interpret
+        )
     tps = _layer_transpose_plans(weights, plan)
     y = y0
     for w, b, tp in zip(weights, biases, tps):

@@ -2,5 +2,8 @@ from repro.distribution.sharding import (  # noqa: F401
     ShardingRules,
     batch_pspecs,
     cache_pspecs,
+    mesh_shard_count,
     param_pspecs,
+    row_block_axes,
+    sharded_csr_pspecs,
 )

@@ -183,8 +183,14 @@ class ShardingRules:
         if logical == "seq":
             return self.seq_axis
         if logical == "row_blocks":
-            # BSR row-block dim: fully sharded over every compute axis
-            axes = tuple(a for a in (self.fsdp_axis, self.tp_axis) if a)
+            # Sparse-weight shard dim (ShardedBlockCSR leading axis / BSR
+            # row-block dim): a dedicated "row_blocks" mesh axis when the
+            # mesh has one (launch.mesh.make_row_blocks_mesh), else fully
+            # sharded over every compute axis. The resolver drops names
+            # absent from the mesh, so one rule covers both mesh styles.
+            axes = ("row_blocks",) + tuple(
+                a for a in (self.fsdp_axis, self.tp_axis) if a
+            )
             return axes or None
         raise ValueError(f"unknown logical axis {logical!r}")
 
@@ -269,6 +275,18 @@ _BSR = {
     "blocks": ("tp", None, None, None),
     "col_idx": ("tp", None),
     "block_mask": ("tp", None),
+}
+# ShardedBlockCSR leaves (repro.sparse.partition): every leaf carries a
+# leading shard axis, sharded over the "row_blocks" logical axis; all
+# trailing dims stay local to the shard. Order mirrors
+# repro.sparse.partition.SHARDED_CSR_LEAVES.
+_SHARDED_CSR = {
+    "values": ("row_blocks", None, None, None),
+    "row_ptr": ("row_blocks", None),
+    "row_id": ("row_blocks", None),
+    "col_idx": ("row_blocks", None),
+    "valid": ("row_blocks", None),
+    "gather_index": ("row_blocks", None),
 }
 
 
@@ -408,3 +426,46 @@ def shardings_for(tree, mesh: Mesh, pspecs):
         pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ----------------------- sharded sparse weights ------------------------------
+
+
+def row_block_axes(
+    mesh: Mesh, rules: "ShardingRules | None" = None
+) -> tuple[str, ...]:
+    """Mesh axes the ``row_blocks`` logical axis lands on, in order —
+    ``("row_blocks",)`` for a dedicated shard mesh, ``("data", "model")``
+    style for compute meshes, ``()`` when nothing matches (unsharded)."""
+    rules = rules or ShardingRules()
+    assignment = rules.resolve("row_blocks") or ()
+    names = assignment if isinstance(assignment, tuple) else (assignment,)
+    return tuple(a for a in names if a in mesh.shape)
+
+
+def mesh_shard_count(mesh: Mesh, rules: "ShardingRules | None" = None) -> int:
+    """How many row-block shards this mesh carries (Π of the resolved
+    ``row_blocks`` axes' sizes) — the ``n_shards`` the partitioner and
+    the sharded plans must agree on."""
+    n = 1
+    for a in row_block_axes(mesh, rules):
+        n *= mesh.shape[a]
+    return n
+
+
+def sharded_csr_pspecs(sharded, mesh: Mesh, rules: "ShardingRules | None" = None):
+    """PartitionSpec pytree for one :class:`repro.sparse.partition.
+    ShardedBlockCSR`, resolved through the same rule table as every
+    other leaf (divisibility fallback included): the leading shard dim
+    lands on the ``row_blocks`` axes, everything else is replicated.
+    Used directly as ``shard_map`` in_specs by ``repro.plan.sharded``.
+    """
+    from repro.sparse.partition import SHARDED_CSR_LEAVES
+
+    rules = rules or ShardingRules()
+    leaves, treedef = jax.tree_util.tree_flatten(sharded)
+    specs = [
+        _resolve_spec(_SHARDED_CSR[name], leaf.shape, mesh, rules)
+        for name, leaf in zip(SHARDED_CSR_LEAVES, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -31,3 +31,17 @@ def make_local_mesh(
     if data is None:
         data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_row_blocks_mesh(shards: int | None = None) -> jax.sharding.Mesh:
+    """1-D mesh over the ``row_blocks`` axis — the sparse-stack shard
+    axis (``repro.sparse.partition`` / ``repro.plan.ShardedStackPlan``).
+
+    ``shards=None`` uses every visible device. On CPU hosts set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax import to get N fake devices (the sharding tests and
+    ``examples/serve_stream.py --shards N`` do exactly this).
+    """
+    n = len(jax.devices())
+    shards = n if shards is None else shards
+    return jax.make_mesh((shards,), ("row_blocks",))

@@ -11,7 +11,11 @@ execution path — ``repro.core.dnn``, ``repro.serve``, ``repro.train``
 — consults plans instead of re-deriving dispatch per call.
 """
 
-from repro.plan.cache import PlanCache, default_cache  # noqa: F401
+from repro.plan.cache import (  # noqa: F401
+    PlanCache,
+    default_cache,
+    reset_default_cache,
+)
 from repro.plan.cost import layer_grid_steps, stack_grid_steps  # noqa: F401
 from repro.plan.layout import (  # noqa: F401
     ELL_WASTE_THRESHOLD,
@@ -22,9 +26,16 @@ from repro.plan.layout import (  # noqa: F401
 from repro.plan.routes import (  # noqa: F401
     ROUTE_FUSED,
     ROUTE_LAYERED,
+    ROUTE_SHARDED,
     ROUTE_XLA,
     layer_path,
     resident_eligible,
+)
+from repro.plan.sharded import (  # noqa: F401
+    ShardedLayerPlan,
+    ShardedStackPlan,
+    build_sharded_plan,
+    mesh_fingerprint,
 )
 from repro.plan.stack_plan import (  # noqa: F401
     DEFAULT_WIDTH_CLASSES,
@@ -41,18 +52,24 @@ __all__ = [
     "DEFAULT_WIDTH_CLASSES",
     "ROUTE_FUSED",
     "ROUTE_LAYERED",
+    "ROUTE_SHARDED",
     "ROUTE_XLA",
     "LayerPlan",
     "PlanCache",
     "PlanKey",
+    "ShardedLayerPlan",
+    "ShardedStackPlan",
     "StackPlan",
     "build_plan",
+    "build_sharded_plan",
     "default_cache",
     "layer_grid_steps",
     "layer_layout",
     "layer_path",
+    "mesh_fingerprint",
     "preferred_layout",
     "quantize_width",
+    "reset_default_cache",
     "resident_eligible",
     "stack_grid_steps",
     "to_preferred_layout",

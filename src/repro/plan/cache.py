@@ -18,6 +18,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Sequence
 
+from repro.plan import sharded as _sharded
 from repro.plan.layout import Weight
 from repro.plan.stack_plan import (
     PlanKey,
@@ -73,18 +74,24 @@ class PlanCache:
         use_resident: bool | None = None,
         relayout: bool | None = None,
         fingerprint: str | None = None,
+        mesh=None,
     ) -> StackPlan:
-        """The plan for this (stack, width, differentiable?) — cached.
+        """The plan for this (stack, width, differentiable?, mesh) —
+        cached.
 
         ``fingerprint`` skips the host-side topology hash when the
         caller already knows it (the engine computes it once at
-        construction).
+        construction). ``mesh`` routes to a mesh-sharded
+        :class:`repro.plan.ShardedStackPlan`; its fingerprint lands in
+        the :class:`PlanKey`, so a sharded and an unsharded plan for the
+        same topology never collide.
         """
         weights = tuple(weights)
         biases = tuple(biases)
         if fingerprint is None:
             fingerprint = topology_fingerprint(weights)
-        key = PlanKey(fingerprint, width, differentiable, use_resident)
+        mesh_fp = None if mesh is None else _sharded.mesh_fingerprint(mesh)
+        key = PlanKey(fingerprint, width, differentiable, use_resident, mesh_fp)
         self.lookups += 1
         plan = self._entries.get(key)
         if (
@@ -99,14 +106,16 @@ class PlanCache:
         self.misses += 1
         # A resident plan for the same stack at ANOTHER width class can
         # donate its width-independent artifacts (relayouted weights,
-        # cached transposes, fused stack) — only the executable and the
-        # grid-step bill are per-width.
+        # cached transposes, fused stack; for sharded plans: partition
+        # layouts and per-shard transposes) — only the executable and
+        # the grid-step bill are per-width.
         donor = None
         for cand in reversed(self._entries.values()):
             if (
                 cand.key.fingerprint == fingerprint
                 and cand.differentiable == differentiable
                 and cand.key.resident == use_resident
+                and cand.key.mesh == mesh_fp
                 and len(cand.source_weights) == len(weights)
                 and all(
                     a is b for a, b in zip(cand.source_weights, weights)
@@ -115,16 +124,28 @@ class PlanCache:
             ):
                 donor = cand
                 break
-        plan = build_plan(
-            weights,
-            biases,
-            width,
-            differentiable=differentiable,
-            use_resident=use_resident,
-            relayout=relayout,
-            fingerprint=fingerprint,
-            donor=donor,
-        )
+        if mesh is not None:
+            plan = _sharded.build_sharded_plan(
+                weights,
+                biases,
+                width,
+                mesh,
+                differentiable=differentiable,
+                use_resident=use_resident,
+                fingerprint=fingerprint,
+                donor=donor,
+            )
+        else:
+            plan = build_plan(
+                weights,
+                biases,
+                width,
+                differentiable=differentiable,
+                use_resident=use_resident,
+                relayout=relayout,
+                fingerprint=fingerprint,
+                donor=donor,
+            )
         self.builds += 1
         self._entries[key] = plan
         self._entries.move_to_end(key)
@@ -152,3 +173,11 @@ def default_cache() -> PlanCache:
     if _DEFAULT_CACHE is None:
         _DEFAULT_CACHE = PlanCache(max_size=4)
     return _DEFAULT_CACHE
+
+
+def reset_default_cache() -> None:
+    """Drop the shared default cache (entries AND stats) — test
+    isolation: a test asserting hit/miss/build counts must not inherit
+    plans another test parked in the process-wide cache."""
+    global _DEFAULT_CACHE
+    _DEFAULT_CACHE = None

@@ -31,6 +31,10 @@ from repro.sparse.bsr import BlockSparseMatrix
 ROUTE_FUSED = "fused"
 ROUTE_LAYERED = "layered"
 ROUTE_XLA = "xla"
+# Mesh-sharded layered route (repro.plan.sharded): per-shard block-CSR
+# kernels under shard_map with a psum between layers. Chosen explicitly
+# by passing a mesh, never by the single-device decision tree above.
+ROUTE_SHARDED = "sharded"
 
 
 def resident_eligible(

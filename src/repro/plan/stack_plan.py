@@ -90,13 +90,19 @@ def topology_fingerprint(weights: Sequence[Weight]) -> str:
 
 class PlanKey(NamedTuple):
     """What a compiled plan is keyed on. Same topology + same width
-    class + same differentiability (+ same residency request) → the
-    same plan, hence a cache hit and zero recompiles."""
+    class + same differentiability (+ same residency request, + same
+    mesh) → the same plan, hence a cache hit and zero recompiles.
+
+    ``mesh`` is the mesh/shard fingerprint
+    (:func:`repro.plan.sharded.mesh_fingerprint`) for sharded plans and
+    ``None`` for single-device plans — a sharded and an unsharded plan
+    for the same topology can NEVER collide in a cache."""
 
     fingerprint: str
     width: int
     differentiable: bool
     resident: bool | None  # the use_resident tri-state the caller asked
+    mesh: str | None = None  # mesh/shard fingerprint, None = unsharded
 
 
 @dataclasses.dataclass(frozen=True)

@@ -119,7 +119,9 @@ class SparseDNNEngine:
     padded to ``batch_align`` so the jit cache stays warm across request
     sizes. ``differentiable=True`` guarantees the served forward is
     ``jax.grad``-compatible (layered custom-VJP kernels only; the
-    VJP-less fused resident path is rejected/bypassed).
+    VJP-less fused resident path is rejected/bypassed). ``mesh=``
+    serves the stack mesh-sharded (``repro.plan.ShardedStackPlan``):
+    same outputs, per-shard grid-step accounting in the step stats.
     """
 
     weights: Sequence[dnn.Weight]
@@ -136,6 +138,13 @@ class SparseDNNEngine:
     # holds one StackPlan per padded panel width seen; size it to the
     # number of width classes the scheduler quantizes to.
     plan_cache: PlanCache | None = None
+    # Mesh-sharded serving: partition every sparse layer's block-CSR
+    # segment across the mesh's row_blocks axes and serve through
+    # repro.plan.ShardedStackPlan (shard-local kernels + psum between
+    # layers). Outputs match the single-device engine; step stats grow
+    # per-shard grid-step accounting. Incompatible with
+    # use_resident=True (the fused kernel is single-device VMEM).
+    mesh: Any = None
 
     def __post_init__(self):
         self.n_layers = len(self.weights)
@@ -148,8 +157,17 @@ class SparseDNNEngine:
                 "use_resident=None/False to route through the layered "
                 "kernel path, whose custom VJPs support jax.grad."
             )
+        if self.mesh is not None and self.use_resident:
+            raise ValueError(
+                "use_resident=True is incompatible with mesh=: the "
+                "VMEM-resident fused kernel runs a single device's "
+                "VMEM; sharded serving always takes the per-shard "
+                "layered route. Pass use_resident=None/False."
+            )
         resident_ok = (
-            not self.differentiable and dnn.resident_eligible(self.weights)
+            not self.differentiable
+            and self.mesh is None
+            and dnn.resident_eligible(self.weights)
         )
         if self.use_resident and not resident_ok:
             raise ValueError(
@@ -190,6 +208,7 @@ class SparseDNNEngine:
             differentiable=self.differentiable,
             use_resident=self._resident,
             fingerprint=self._fingerprint,
+            mesh=self.mesh,
         )
         return plan, self.plan_cache.hits > before
 
@@ -294,6 +313,21 @@ class SparseDNNEngine:
         out = plan.forward(yp)
         self._served += batch
         self._steps += 1
+        plan_stats = {
+            "width_class": width,
+            "cache_hit": cache_hit,
+            "route": plan.route,
+            "compiles": plan.compile_count,
+        }
+        if getattr(plan, "is_sharded", False):
+            # Per-shard accounting: each shard's bill is its local
+            # segment length × column tiles; they sum to plan.grid_steps
+            # (= the unsharded occupancy-exact bill when shard counts
+            # divide the stored blocks evenly).
+            plan_stats["shards"] = plan.n_shards
+            plan_stats["grid_steps_per_shard"] = list(
+                plan.grid_steps_per_shard
+            )
         stats = {
             "batch": batch,
             "padded_batch": width,
@@ -305,12 +339,7 @@ class SparseDNNEngine:
             "pallas_calls": plan.pallas_calls,
             "served_total": self._served,
             "engine_steps": self._steps,
-            "plan": {
-                "width_class": width,
-                "cache_hit": cache_hit,
-                "route": plan.route,
-                "compiles": plan.compile_count,
-            },
+            "plan": plan_stats,
         }
         return out[:, :batch], stats
 

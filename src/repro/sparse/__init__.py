@@ -5,12 +5,20 @@ from repro.sparse.bcsr import (
     reset_transpose_sort_count,
     transpose_sort_count,
 )
+from repro.sparse.partition import (
+    ShardedBlockCSR,
+    partition_block_csr,
+    stack_transpose_plans,
+)
 from repro.sparse import ops
 
 __all__ = [
     "BlockSparseMatrix",
     "BlockCSRMatrix",
     "BcsrTransposePlan",
+    "ShardedBlockCSR",
+    "partition_block_csr",
+    "stack_transpose_plans",
     "transpose_sort_count",
     "reset_transpose_sort_count",
     "ops",

@@ -65,7 +65,13 @@ def make_sparse_train_step(
     differentiable=True)``). Its cached block-CSR transposes make every
     backward pass sort-free: the frozen topology is sorted exactly once,
     at plan build, instead of once per step — the GraphChallenge
-    amortization applied to training.
+    amortization applied to training. A mesh-sharded
+    :class:`repro.plan.ShardedStackPlan` (``repro.plan.
+    build_sharded_plan(..., differentiable=True)``) instead runs BOTH
+    passes shard-local under shard_map: fresh values re-shard through
+    the plan's frozen partition each step and weight cotangents come
+    back on the caller's unsharded block-CSR layout, so the optimizer
+    update is unchanged.
     """
 
     def loss_fn(params, batch):

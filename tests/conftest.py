@@ -8,6 +8,15 @@ import jax
 
 jax.config.update("jax_default_matmul_precision", "highest")
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (multi-device subprocess runs); the "
+        "CI multi-device job deselects them because it runs the same "
+        "checks in-process on its 8-device view",
+    )
+
 # Property tests prefer real hypothesis (requirements-dev.txt); in
 # hermetic containers without it, install the deterministic fallback shim
 # so the same test modules still collect and run.

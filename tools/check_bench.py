@@ -70,6 +70,7 @@ PARAMS = {
         "trace",
         "train_params",
     ),
+    "sharded": ("m", "layers", "block", "blocks_per_row", "n", "shards"),
 }
 
 EXACT = {
@@ -117,6 +118,21 @@ TOPOLOGY_EXACT = (
     "grid_steps_csr",
     "max_blocks_per_row",
     "mean_blocks_per_row",
+)
+# Sharding arm (balanced block-CSR partitioner): all host-side
+# deterministic accounting — per-shard nnz/bills, the bill-equality
+# invariant, and the load-imbalance factor are checked exactly.
+SHARDED_EXACT = (
+    "nnz_blocks_total",
+    "nnz_per_shard",
+    "grid_steps_unsharded",
+    "grid_steps_per_shard",
+    "grid_steps_sharded_total",
+    "shard_pad_blocks",
+    "bill_matches_unsharded",
+    "imbalance",
+    "critical_path_steps",
+    "parallel_speedup_bound",
 )
 # Deterministic serve accounting, checked exactly for BOTH arms.
 SERVE_EXACT = (
@@ -308,6 +324,34 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
             st_f = fs.get("train", {}).get("step_time_s", {}).get(arm)
             if st_b is not None and st_f is not None:
                 gate.time("plan", f"train.step_time_s.{arm}", st_b, st_f)
+
+    # --- sharded: partitioner accounting, all exact -------------------
+    pair = _section_pair(gate, "sharded", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for field in SHARDED_EXACT:
+            if field not in bs:
+                gate.skip("sharded", f"{field} absent from baseline")
+                continue
+            if field not in fs:
+                gate.missing("sharded", field)
+                continue
+            gate.exact("sharded", field, bs[field], fs[field])
+        # headline invariants hold regardless of baseline drift: the
+        # per-shard bills must sum to the unsharded bill and the
+        # partitioner must stay within the 10 % imbalance budget
+        gate._add(
+            "sharded",
+            "bills sum to unsharded",
+            True,
+            fs.get("bill_matches_unsharded", False),
+            "ok" if fs.get("bill_matches_unsharded", False) else "FAIL",
+        )
+        imbalance = fs.get("imbalance")
+        if imbalance is None:
+            gate.missing("sharded", "imbalance")
+        else:
+            gate.no_worse("sharded", "imbalance <= 1.10", 1.10, imbalance)
 
     # --- serve: deterministic accounting exact, pad waste gated -------
     pair = _section_pair(gate, "serve", baseline, fresh)

@@ -34,8 +34,11 @@ FENCED_DOCS = [
 
 # Example scripts with a fast deterministic mode, run by the CI docs job
 # (script path relative to the repo root, plus its quick-mode args).
+# The --shards run exercises the mesh-sharded serving path on 2 fake
+# host devices (the flag sets XLA_FLAGS before the jax import).
 QUICK_EXAMPLES = [
     ("examples/serve_stream.py", ["--quick"]),
+    ("examples/serve_stream.py", ["--quick", "--shards", "2"]),
 ]
 
 
