@@ -594,7 +594,195 @@ def sharded_arm(m: int, L: int, block: int, bpr: int, n: int, shards: int):
     }
 
 
-ALL_ARMS = ("topologies", "fused", "train", "serve", "plan", "sharded")
+def faults_arm(
+    m: int,
+    L: int,
+    bpr: int,
+    n_requests: int,
+    batch_size: int,
+    tile_align: int,
+    seed: int,
+):
+    """The ROBUSTNESS arm (docs/robustness.md), fully deterministic.
+
+    Three sub-runs over the same benchmark stack:
+
+    * ``serve`` — a 100-request deterministic trace served through a
+      fault-injected engine + batcher: NaN-poisoned panels (quarantine),
+      a transient step failure (retry), a cache-eviction storm, a
+      straggler tick, impossible deadlines (shed at packing time) and a
+      burst past the bounded queue (backpressure rejections). The run
+      must complete without raising and keep goodput ≥ 0.8.
+    * ``degrade`` — a mesh-sharded engine loses its mesh mid-stream and
+      must serve the in-flight panel on the single-device plan with
+      results identical to a healthy single-device engine.
+    * ``train`` — resilient sparse training through one injected
+      NaN-loss: restore-and-skip, final losses matching a clean run
+      exactly.
+    """
+    import tempfile
+    import time
+
+    from repro.launch.mesh import make_row_blocks_mesh
+    from repro.serve import ContinuousBatcher, SparseDNNEngine
+    from repro.testing import faults as F
+    from repro.train.optimizer import sgd
+    from repro.train.resilience import run_resilient_training
+    from repro.train.sparse import init_sparse_mlp_state
+
+    ws = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(600 + i), (m, m), (16, 16), blocks_per_row=bpr
+        )
+        for i in range(L)
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+
+    # --- serve: faulted trace, goodput floor --------------------------
+    rng = np.random.default_rng(seed)
+    cols = [
+        jnp.asarray(rng.uniform(0.0, 1.0, size=(m,)).astype(np.float32))
+        for _ in range(n_requests)
+    ]
+    inj = F.FaultInjector(seed=seed)
+    inj.schedule(F.SITE_PANEL_NANS, 3, count=1, mode="nan")
+    inj.schedule(F.SITE_PANEL_NANS, 11, count=1, mode="nan")
+    inj.schedule(F.SITE_STEP_TRANSIENT, 6, failures=1)  # retried, no loss
+    inj.schedule(F.SITE_CACHE_EVICTION, 9)
+    inj.schedule(F.SITE_STRAGGLER, 5, seconds=0.0)
+    eng = SparseDNNEngine(
+        ws, bs, batch_align=tile_align, fault_injector=inj,
+        max_step_retries=2,
+    )
+    batcher = ContinuousBatcher(
+        eng,
+        batch_size=batch_size,
+        min_fill=0.0,
+        max_wait=0,
+        max_pending=20,
+        fault_injector=inj,
+    )
+    t0 = time.perf_counter()
+    idx = 0
+    for tick in range(20):
+        arrivals = 24 if tick == 12 else 4  # burst past the queue bound
+        for _ in range(arrivals):
+            if idx >= n_requests:
+                break
+            deadline = None
+            if idx % 10 == 9:
+                deadline = batcher.tick  # impossible → shed at packing
+            elif idx % 7 == 0:
+                deadline = batcher.tick + 3  # feasible
+            batcher.submit(cols[idx], deadline=deadline)
+            idx += 1
+        batcher.step()
+    batcher.drain()
+    t_serve = time.perf_counter() - t0
+    sstats = batcher.stats()
+    fa = sstats.faults
+    serve = {
+        "completed": sstats.requests,
+        "engine_steps": sstats.engine_steps,
+        "deadline_misses": sstats.deadline_misses,
+        "goodput": sstats.goodput,
+        "faults": fa.as_dict(),
+        "shed_fraction": fa.shed / fa.offered if fa.offered else 0.0,
+        "injector_fired": len(inj.fired),
+        "injector_pending": inj.pending(),
+        "wall_time_s": t_serve,
+    }
+
+    # --- degrade: shard failure → single-device fallback --------------
+    cws = [BlockCSRMatrix.from_bsr(w) for w in ws]
+    inj2 = F.FaultInjector(seed=seed)
+    inj2.schedule(F.SITE_SHARD_FAILURE, 1, reason="injected node loss")
+    meng = SparseDNNEngine(
+        cws, bs, batch_align=tile_align,
+        mesh=make_row_blocks_mesh(1), fault_injector=inj2,
+    )
+    seng = SparseDNNEngine(cws, bs, batch_align=tile_align)
+    panels = [
+        jnp.stack(cols[i * 8 : (i + 1) * 8], axis=1) for i in range(3)
+    ]
+    levels, failed_dispatches, match_after_failure = [], 0, True
+    for i, p in enumerate(panels):
+        out, st = meng.infer(p)
+        if st["failed"]:
+            failed_dispatches += 1
+            continue
+        levels.append(st["plan"]["level"])
+        if i >= 1:  # dispatches at/after the injected failure
+            ref, _ = seng.infer(p)
+            match_after_failure &= bool(np.array_equal(out, ref))
+    degrade = {
+        "levels": levels,
+        "recovery_steps": failed_dispatches,  # panels lost to the fault
+        "matches_single_device_after_failure": match_after_failure,
+        "ladder_events": len(meng.ladder.events),
+        "degraded": meng.ladder.degraded,
+    }
+
+    # --- train: NaN-loss → restore-and-skip, clean-run parity ---------
+    tm = 32
+
+    def batch_fn(step):
+        k = jax.random.PRNGKey(2000 + step)
+        y0 = jax.random.uniform(k, (tm, 8), jnp.float32)
+        return {"y0": y0, "targets": 0.3 * y0}
+
+    def fresh_state():
+        tws = [
+            BlockCSRMatrix.from_bsr(
+                BlockSparseMatrix.random(
+                    jax.random.PRNGKey(700 + i), (tm, tm), (8, 8),
+                    blocks_per_row=2, minval=-0.5, maxval=0.5,
+                )
+            )
+            for i in range(2)
+        ]
+        tbs = [jnp.zeros((tm,), jnp.float32) for _ in tws]
+        return init_sparse_mlp_state(tws, tbs, sgd(0.5, momentum=0.0))
+
+    inj3 = F.FaultInjector(seed=seed)
+    inj3.schedule(F.SITE_TRAIN_NAN_LOSS, 3)
+    with tempfile.TemporaryDirectory() as d:
+        _, faulted = run_resilient_training(
+            fresh_state(), batch_fn, sgd(0.5, momentum=0.0), 6,
+            os.path.join(d, "faulted"), ckpt_interval=2,
+            use_kernel=False, fault_injector=inj3,
+        )
+        _, clean = run_resilient_training(
+            fresh_state(), batch_fn, sgd(0.5, momentum=0.0), 6,
+            os.path.join(d, "clean"), ckpt_interval=2, use_kernel=False,
+        )
+    train = {
+        "steps": 6,
+        "skipped_steps": faulted["skipped"],
+        "restarts": len(faulted["restarts"]),
+        "losses_match_clean": faulted["losses"] == clean["losses"],
+        "loss_decreased": (
+            faulted["losses"][5] < faulted["losses"][0]
+        ),
+    }
+
+    return {
+        "m": m,
+        "layers": L,
+        "blocks_per_row": bpr,
+        "requests": n_requests,
+        "batch_size": batch_size,
+        "tile_align": tile_align,
+        "seed": seed,
+        "serve": serve,
+        "degrade": degrade,
+        "train": train,
+    }
+
+
+ALL_ARMS = (
+    "topologies", "fused", "train", "serve", "plan", "sharded", "faults"
+)
 
 
 def run(quick: bool = False, arms=None):
@@ -787,6 +975,50 @@ def run(quick: bool = False, arms=None):
         assert sharded["shard_pad_blocks"] == 0, sharded
         assert sharded["imbalance"] <= 1.10, sharded
         payload["sharded"] = sharded
+
+    if "faults" in arms:
+        # Robustness arm: identical faulted trace in quick and full
+        # runs (like serve) so the gate compares like with like.
+        faults = faults_arm(
+            m=64,
+            L=3,
+            bpr=2,
+            n_requests=100,
+            batch_size=16,
+            tile_align=8,
+            seed=11,
+        )
+        fserve = faults["serve"]
+        print(
+            f"faults: {fserve['completed']}/{fserve['faults']['offered']} "
+            f"served  goodput {fserve['goodput']:.3f}  "
+            f"shed {fserve['faults']['shed']} "
+            f"rejected {fserve['faults']['rejected']} "
+            f"quarantined {fserve['faults']['quarantined']}  "
+            f"degrade {'→'.join(faults['degrade']['levels'][:2])} "
+            f"(match {faults['degrade']['matches_single_device_after_failure']})  "
+            f"train restarts {faults['train']['restarts']} "
+            f"skip {faults['train']['skipped_steps']}",
+            flush=True,
+        )
+        # robustness arm: the faulted trace completes with goodput ≥
+        # 0.8, every scheduled fault actually fired, shard failure
+        # degrades to a single-device plan with identical results, and
+        # the NaN-lossed train run replays a clean run exactly
+        assert fserve["goodput"] >= 0.8, fserve
+        assert fserve["injector_pending"] == 0, fserve
+        assert fserve["faults"]["quarantined"] == 2, fserve
+        assert fserve["faults"]["retried_steps"] == 1, fserve
+        assert fserve["faults"]["rejected"] > 0, fserve
+        assert fserve["faults"]["shed"] > 0, fserve
+        assert faults["degrade"]["recovery_steps"] == 0, faults["degrade"]
+        assert faults["degrade"]["matches_single_device_after_failure"], (
+            faults["degrade"]
+        )
+        assert faults["degrade"]["degraded"], faults["degrade"]
+        assert faults["train"]["losses_match_clean"], faults["train"]
+        assert faults["train"]["skipped_steps"] == [3], faults["train"]
+        payload["faults"] = faults
 
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

@@ -17,6 +17,13 @@ from repro.plan.cache import (  # noqa: F401
     reset_default_cache,
 )
 from repro.plan.cost import layer_grid_steps, stack_grid_steps  # noqa: F401
+from repro.plan.degrade import (  # noqa: F401
+    LEVEL_LAYERED,
+    LEVEL_RESIDENT,
+    LEVEL_SHARDED,
+    DegradationLadder,
+    DegradeEvent,
+)
 from repro.plan.layout import (  # noqa: F401
     ELL_WASTE_THRESHOLD,
     layer_layout,
@@ -54,6 +61,11 @@ __all__ = [
     "ROUTE_LAYERED",
     "ROUTE_SHARDED",
     "ROUTE_XLA",
+    "LEVEL_LAYERED",
+    "LEVEL_RESIDENT",
+    "LEVEL_SHARDED",
+    "DegradationLadder",
+    "DegradeEvent",
     "LayerPlan",
     "PlanCache",
     "PlanKey",

@@ -5,6 +5,8 @@ from repro.serve.engine import (  # noqa: F401
 )
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousBatcher,
+    FaultCounters,
+    QueueFull,
     Request,
     RequestQueue,
     ServeStats,

@@ -43,14 +43,17 @@ every panel (``ContinuousBatcher(width_classes=...)``).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dnn
 from repro.models.model import Model
-from repro.plan import PlanCache, topology_fingerprint
+from repro.plan import DegradationLadder, PlanCache, topology_fingerprint
+from repro.testing import faults as _faults
 
 Array = jax.Array
 
@@ -145,6 +148,24 @@ class SparseDNNEngine:
     # per-shard grid-step accounting. Incompatible with
     # use_resident=True (the fused kernel is single-device VMEM).
     mesh: Any = None
+    # Fault handling (docs/robustness.md). ``fault_injector``: a
+    # repro.testing.faults.FaultInjector polled at this engine's named
+    # sites, keyed by the dispatch ordinal (None in production).
+    # Transient step failures are retried up to ``max_step_retries``
+    # with exponential backoff (base ``retry_backoff_s``, 0 = no sleep);
+    # an exhausted panel FAILS GRACEFULLY: step returns (None, stats)
+    # naming the lost request ids instead of raising.
+    fault_injector: Any = None
+    max_step_retries: int = 2
+    retry_backoff_s: float = 0.0
+    # Per-request NaN quarantine: after each step, non-finite output
+    # columns fail only their own request ids (stats carry them as
+    # ``quarantined_request_ids``); the rest of the panel is served.
+    quarantine_nonfinite: bool = True
+    # Validate sparse layout invariants at construction (sorted
+    # in-bounds indices, finite values — see BlockCSRMatrix.validate).
+    # Trust boundary only; the per-step hot path never re-checks.
+    validate: bool = True
 
     def __post_init__(self):
         self.n_layers = len(self.weights)
@@ -179,13 +200,23 @@ class SparseDNNEngine:
         self._resident = (
             resident_ok if self.use_resident is None else self.use_resident
         )
+        if self.validate:
+            for i, w in enumerate(self.weights):
+                if hasattr(w, "validate"):
+                    w.validate(name=f"SparseDNNEngine layer {i} weight")
         if self.plan_cache is None:
             self.plan_cache = PlanCache(max_size=16)
         # Fingerprint once — weights are immutable across requests; the
         # hot path must not re-hash the topology per step.
         self._fingerprint = topology_fingerprint(tuple(self.weights))
+        # The degradation ladder owns execution-level health: sharded →
+        # single-device → layered fallback for the same fingerprint.
+        self._ladder = DegradationLadder(
+            self.plan_cache, mesh=self.mesh, use_resident=self._resident
+        )
         self._served = 0
         self._steps = 0
+        self._dispatches = 0  # fault sites key on this ordinal
         self._next_rid = 0
         # Staged work is kept as contiguous (request_ids, panel) chunks —
         # a chunk is only split when a step's limit lands inside it, so
@@ -194,23 +225,28 @@ class SparseDNNEngine:
         self._staged: list[tuple[list, Array]] = []
         self._staged_count = 0
 
-    def _plan_for_width(self, width: int):
-        """The compiled plan serving a ``width``-wide panel, plus
-        whether this lookup hit the cache. Route rules are the plan
+    @property
+    def ladder(self) -> DegradationLadder:
+        """The engine's degradation ladder (health marks, events)."""
+        return self._ladder
+
+    def _plan_for_width(self, width: int, *, step: int = -1, compile_hook=None):
+        """(plan, level, cache_hit) serving a ``width``-wide panel at
+        the best healthy degradation level. Route rules are the plan
         layer's (fused when eligible and not differentiable; layered
         per-layout kernels otherwise; dense layers keep jax.grad
-        compatibility under ``differentiable=True`` via the XLA form)."""
-        before = self.plan_cache.hits
-        plan = self.plan_cache.get(
+        compatibility under ``differentiable=True`` via the XLA form);
+        the ladder only decides WHICH level of them to serve at when the
+        mesh or the resident path is marked unhealthy."""
+        return self._ladder.get_plan(
             tuple(self.weights),
             tuple(self.biases),
             width,
             differentiable=self.differentiable,
-            use_resident=self._resident,
             fingerprint=self._fingerprint,
-            mesh=self.mesh,
+            step=step,
+            compile_hook=compile_hook,
         )
-        return plan, self.plan_cache.hits > before
 
     # ------------------------------------------------------------------
     # step-level API (driven by serve.scheduler.ContinuousBatcher)
@@ -260,6 +296,9 @@ class SparseDNNEngine:
             "served_total": self._served,
             "engine_steps": self._steps,
             "plan": None,
+            "failed": False,
+            "retries": 0,
+            "quarantined_request_ids": [],
         }
 
     def step(
@@ -309,15 +348,93 @@ class SparseDNNEngine:
             if len(take) == 1
             else jnp.concatenate([arr for _, arr in take], axis=1)
         )
-        plan, cache_hit = self._plan_for_width(width)
-        out = plan.forward(yp)
+        # ---- fault sites (docs/robustness.md), keyed by dispatch ordinal
+        ordinal = self._dispatches
+        self._dispatches += 1
+        inj = self.fault_injector
+        compile_spec = transient_spec = None
+        if inj is not None:
+            if inj.fires(_faults.SITE_CACHE_EVICTION, ordinal) is not None:
+                self.plan_cache.clear()  # eviction storm: every width recompiles
+            spec = inj.fires(_faults.SITE_SHARD_FAILURE, ordinal)
+            if spec is not None and self.mesh is not None:
+                self._ladder.mark_unhealthy(
+                    "sharded",
+                    reason=spec.get("reason", "injected shard failure"),
+                    step=ordinal,
+                )
+            spec = inj.fires(_faults.SITE_PANEL_NANS, ordinal)
+            if spec is not None:
+                # poison only real request columns — pad stays clean
+                yp, _ = _faults.poison_panel(
+                    yp, limit=batch, rng=inj.rng, **spec
+                )
+            compile_spec = inj.fires(_faults.SITE_PLAN_COMPILE, ordinal)
+            transient_spec = inj.fires(_faults.SITE_STEP_TRANSIENT, ordinal)
+        failures_left = (
+            int(transient_spec.get("failures", 1)) if transient_spec else 0
+        )
+
+        def compile_hook(level: str) -> None:
+            nonlocal compile_spec
+            if compile_spec is not None:
+                compile_spec = None  # fires once, at the preferred level
+                raise _faults.InjectedFault(
+                    f"injected plan-compile failure at level {level!r}"
+                )
+
+        out = None
+        retries = 0
+        last_err: Exception | None = None
+        plan = level = cache_hit = None
+        for attempt in range(self.max_step_retries + 1):
+            try:
+                plan, level, cache_hit = self._plan_for_width(
+                    width, step=ordinal, compile_hook=compile_hook
+                )
+                if failures_left > 0:
+                    failures_left -= 1
+                    raise _faults.TransientFault(
+                        "injected transient step failure"
+                    )
+                out = plan.forward(yp)
+                break
+            except _faults.TransientFault as e:
+                last_err = e
+                if attempt >= self.max_step_retries:
+                    break
+                retries += 1
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * 2**attempt)
+            except Exception as e:  # noqa: BLE001 — not retryable
+                last_err = e
+                break
+        if out is None:
+            # Graceful panel failure: the batch's requests are lost, the
+            # engine (and the requests behind it) live on.
+            stats = self._idle_stats()
+            stats.update(
+                batch=batch,
+                request_ids=ids,
+                failed=True,
+                retries=retries,
+                error=f"{type(last_err).__name__}: {last_err}",
+            )
+            return None, stats
         self._served += batch
         self._steps += 1
+        res = out[:, :batch]
+        quarantined: list = []
+        if self.quarantine_nonfinite and not bool(jnp.isfinite(res).all()):
+            col_ok = np.asarray(jnp.isfinite(res).all(axis=0))
+            quarantined = [ids[j] for j in range(batch) if not col_ok[j]]
         plan_stats = {
             "width_class": width,
             "cache_hit": cache_hit,
             "route": plan.route,
             "compiles": plan.compile_count,
+            "level": level,
+            "degraded": level != self._ladder.preferred_level,
         }
         if getattr(plan, "is_sharded", False):
             # Per-shard accounting: each shard's bill is its local
@@ -340,8 +457,11 @@ class SparseDNNEngine:
             "served_total": self._served,
             "engine_steps": self._steps,
             "plan": plan_stats,
+            "failed": False,
+            "retries": retries,
+            "quarantined_request_ids": quarantined,
         }
-        return out[:, :batch], stats
+        return res, stats
 
     def drain(self, limit: int | None = None) -> list[tuple[Array, dict]]:
         """Step until the stage is empty (≤ ``limit`` columns per step)."""

@@ -48,8 +48,14 @@ import jax
 import numpy as np
 
 from repro.serve.engine import SparseDNNEngine
+from repro.testing import faults as _faults
 
 Array = jax.Array
+
+
+class QueueFull(RuntimeError):
+    """Bounded-queue backpressure: admission rejected, caller should
+    shed load upstream (or retry later)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,12 +84,21 @@ class RequestQueue:
     waiting request climbs one priority class, so any request overtakes
     any finite-priority stream after a bounded wait — there is no
     arrival pattern under which a request waits forever.
+
+    ``max_pending`` bounds the pool: admission past the bound raises
+    :class:`QueueFull` (backpressure — an unbounded queue converts
+    overload into unbounded latency AND unbounded memory; a bounded one
+    converts it into explicit, countable rejections). ``None`` keeps
+    the legacy unbounded behaviour.
     """
 
-    def __init__(self, age_every: int = 8):
+    def __init__(self, age_every: int = 8, max_pending: int | None = None):
         if age_every < 1:
             raise ValueError("age_every must be >= 1")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
         self.age_every = age_every
+        self.max_pending = max_pending
         self._pending: list[Request] = []
         self._next_rid = 0
 
@@ -102,10 +117,19 @@ class RequestQueue:
         priority: int = 0,
         deadline: int | None = None,
     ) -> int:
-        """Admit one request; returns its id."""
+        """Admit one request; returns its id. Raises :class:`QueueFull`
+        when a ``max_pending`` bound is set and reached."""
         if features.ndim != 1:
             raise ValueError(
                 f"features must be one (m,) column, got {features.shape}"
+            )
+        if (
+            self.max_pending is not None
+            and len(self._pending) >= self.max_pending
+        ):
+            raise QueueFull(
+                f"request queue at max_pending={self.max_pending}; "
+                "shed load upstream"
             )
         rid = self._next_rid
         self._next_rid += 1
@@ -126,8 +150,14 @@ class RequestQueue:
         """Remove and return the ≤ k most urgent pending requests."""
         if k <= 0 or not self._pending:
             return []
+        take = self._dispatch_order(now)[:k]
+        taken = {r.rid for r in take}
+        self._pending = [r for r in self._pending if r.rid not in taken]
+        return take
+
+    def _dispatch_order(self, now: int) -> list[Request]:
         inf = float("inf")
-        order = sorted(
+        return sorted(
             self._pending,
             key=lambda r: (
                 self.effective_priority(r, now),
@@ -136,10 +166,47 @@ class RequestQueue:
                 r.rid,
             ),
         )
-        take = order[:k]
-        taken = {r.rid for r in take}
-        self._pending = [r for r in self._pending if r.rid not in taken]
-        return take
+
+    def shed_hopeless(
+        self, now: int, batch_size: int
+    ) -> tuple[list[Request], list[Request]]:
+        """Drop deadlined requests that cannot complete in time; returns
+        ``(expired, inadmissible)``.
+
+        A panel dispatched at tick t completes at t+1, so a request at
+        dispatch position ``p`` (in the queue's own order) finishes no
+        earlier than ``now + 1 + p // batch_size``. ``expired`` requests
+        are already past deadline at packing time (``deadline < now``);
+        ``inadmissible`` ones are not yet expired but their earliest
+        completion overshoots. Both classes would burn kernel grid steps
+        to produce an answer nobody is waiting for — shedding them at
+        packing time is what keeps *goodput* (useful completions per
+        offered request) from collapsing under overload. Positions are
+        recomputed as hopeless requests are removed, so a request is
+        only shed if it cannot make it even AFTER the queue ahead of it
+        is thinned.
+        """
+        if not self._pending:
+            return [], []
+        expired: list[Request] = []
+        inadmissible: list[Request] = []
+        keep: list[Request] = []
+        pos = 0
+        for r in self._dispatch_order(now):
+            if r.deadline is None:
+                keep.append(r)
+                pos += 1
+                continue
+            earliest_done = now + 1 + pos // batch_size
+            if earliest_done > r.deadline:
+                (expired if r.deadline < now else inadmissible).append(r)
+            else:
+                keep.append(r)
+                pos += 1
+        if expired or inadmissible:
+            kept = {r.rid for r in keep}
+            self._pending = [r for r in self._pending if r.rid in kept]
+        return expired, inadmissible
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +222,59 @@ class StepRecord:
     resident: bool
     width_class: int | None = None  # plan width the panel compiled at
     plan_cache_hit: bool | None = None  # compiled-plan reuse vs build
+    retries: int = 0  # transient-failure retries before success
+    quarantined: int = 0  # non-finite output columns failed per-request
+    plan_level: str | None = None  # degradation level the panel ran at
+    degraded: bool = False  # level below the engine's preferred one
+
+
+@dataclasses.dataclass
+class FaultCounters:
+    """Serving fault accounting (docs/robustness.md).
+
+    ``offered`` counts every admission attempt, accepted or not — it is
+    the goodput denominator. The loss buckets are disjoint: a request
+    ends up in exactly one of rejected / shed / quarantined / failed /
+    completed (late or on time).
+    """
+
+    offered: int = 0  # submit() attempts (accepted + rejected)
+    rejected: int = 0  # bounded-queue backpressure rejections
+    shed_expired: int = 0  # already past deadline at packing time
+    shed_inadmissible: int = 0  # could not finish before deadline
+    quarantined: int = 0  # non-finite output, failed individually
+    failed: int = 0  # lost to exhausted step retries
+    retried_steps: int = 0  # transient-failure retries (step-level)
+    failed_steps: int = 0  # panels lost after retry exhaustion
+    straggler_ticks: int = 0  # injected/observed slow ticks
+    completed_late: int = 0  # served, but past deadline
+
+    @property
+    def shed(self) -> int:
+        return self.shed_expired + self.shed_inadmissible
+
+    def goodput(self, completed: int) -> float:
+        """Useful completions / offered requests. Late completions are
+        not useful; a fault-free run scores 1.0 by construction."""
+        offered = self.offered if self.offered else completed
+        if offered <= 0:
+            return 1.0
+        return (completed - self.completed_late) / offered
+
+    def as_dict(self) -> dict:
+        return {
+            "offered": self.offered,
+            "rejected": self.rejected,
+            "shed_expired": self.shed_expired,
+            "shed_inadmissible": self.shed_inadmissible,
+            "shed": self.shed,
+            "quarantined": self.quarantined,
+            "failed": self.failed,
+            "retried_steps": self.retried_steps,
+            "failed_steps": self.failed_steps,
+            "straggler_ticks": self.straggler_ticks,
+            "completed_late": self.completed_late,
+        }
 
 
 @dataclasses.dataclass
@@ -189,6 +309,11 @@ class ServeStats:
         default_factory=dict
     )
     plan_cache_hit_rate: float = 0.0
+    # Fault accounting (docs/robustness.md): loss buckets + goodput =
+    # on-time completions / offered requests. Fault-free legacy callers
+    # get empty counters and goodput 1.0.
+    faults: FaultCounters = dataclasses.field(default_factory=FaultCounters)
+    goodput: float = 1.0
 
     @classmethod
     def from_steps(
@@ -197,7 +322,9 @@ class ServeStats:
         latencies: dict[int, int],
         deadline_misses: int,
         idle_ticks: int,
+        faults: FaultCounters | None = None,
     ) -> "ServeStats":
+        faults = faults if faults is not None else FaultCounters()
         rows = sum(s.occupancy for s in steps)
         padded = sum(s.padded_width for s in steps)
         lat = sorted(latencies.values())
@@ -236,6 +363,8 @@ class ServeStats:
             plan_cache_hit_rate=(
                 plan_hits / plan_lookups if plan_lookups else 0.0
             ),
+            faults=faults,
+            goodput=faults.goodput(len(latencies)),
         )
 
     def summary(self) -> dict:
@@ -258,6 +387,8 @@ class ServeStats:
                 for k, v in sorted(self.plan_recompiles_by_class.items())
             },
             "plan_cache_hit_rate": self.plan_cache_hit_rate,
+            "goodput": self.goodput,
+            "faults": self.faults.as_dict(),
         }
 
 
@@ -283,8 +414,23 @@ class ContinuousBatcher:
       (pad to the kernel tile only). Per-class recompile counts land in
       :class:`ServeStats`.
 
+    * ``max_pending`` — bounds the request queue; admission past it is
+      REJECTED (``submit`` returns None, counted in the fault stats) —
+      backpressure instead of unbounded latency. ``None`` = unbounded.
+    * ``enforce_deadlines`` — shed deadlined requests that cannot
+      complete in time at packing time (``RequestQueue.shed_hopeless``)
+      instead of serving them late: shed requests count as deadline
+      misses, never as completions. ``False`` restores the record-only
+      legacy behaviour.
+    * ``fault_injector`` — a ``repro.testing.faults.FaultInjector``
+      polled at the tick-keyed sites (straggler); pass the same
+      injector to the engine for the dispatch-keyed sites.
+
     The batcher owns the clock: one ``step()`` = one tick. Completed
-    requests' outputs are available via :meth:`result`.
+    requests' outputs are available via :meth:`result`; requests lost
+    to quarantine / shedding / rejection / step failure are in
+    :attr:`failures` with a reason string. :meth:`stats` rolls all of
+    it into :class:`ServeStats` (fault counters + goodput).
     """
 
     def __init__(
@@ -296,6 +442,9 @@ class ContinuousBatcher:
         max_wait: int = 4,
         age_every: int = 8,
         width_classes: Sequence[int] | None = None,
+        max_pending: int | None = None,
+        enforce_deadlines: bool = True,
+        fault_injector=None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -318,13 +467,17 @@ class ContinuousBatcher:
         self.min_fill = min_fill
         self.max_wait = max_wait
         self.width_classes = width_classes
-        self.queue = RequestQueue(age_every=age_every)
+        self.enforce_deadlines = enforce_deadlines
+        self.fault_injector = fault_injector
+        self.queue = RequestQueue(age_every=age_every, max_pending=max_pending)
         self._tick = 0
         self._idle_ticks = 0
         self._results: dict[int, Array] = {}
         self._latencies: dict[int, int] = {}
         self._deadline_misses = 0
         self._steps: list[StepRecord] = []
+        self._faults = FaultCounters()
+        self._failures: dict[int, str] = {}  # rid → failure reason
 
     @property
     def tick(self) -> int:
@@ -334,17 +487,32 @@ class ContinuousBatcher:
     def completed(self) -> int:
         return len(self._latencies)
 
+    @property
+    def failures(self) -> dict[int, str]:
+        """rid → reason, for every admitted request lost to a fault path
+        (shed / quarantined / failed step). Rejected submissions never
+        got an rid; they are only counted in ``stats().faults``."""
+        return dict(self._failures)
+
     def submit(
         self,
         features: Array,
         *,
         priority: int = 0,
         deadline: int | None = None,
-    ) -> int:
-        """Admit one request at the current tick; returns its id."""
-        return self.queue.submit(
-            features, now=self._tick, priority=priority, deadline=deadline
-        )
+    ) -> int | None:
+        """Admit one request at the current tick; returns its id — or
+        ``None`` when the bounded queue rejects it (backpressure; the
+        rejection is counted in the fault stats)."""
+        self._faults.offered += 1
+        try:
+            return self.queue.submit(
+                features, now=self._tick, priority=priority,
+                deadline=deadline,
+            )
+        except QueueFull:
+            self._faults.rejected += 1
+            return None
 
     def result(self, rid: int) -> Array:
         """The (m,) output column of a completed request."""
@@ -369,7 +537,37 @@ class ContinuousBatcher:
         request id; completed requests leave at the step boundary, so a
         request arriving between steps joins the next panel whenever a
         slot is free — never behind a fixed-width batch quota.
+
+        Fault paths (docs/robustness.md): deadlined requests that cannot
+        complete in time are shed BEFORE packing; a panel whose retries
+        are exhausted fails its member requests individually instead of
+        raising; non-finite output columns are quarantined per-request.
+        The stream keeps ticking through all three.
         """
+        inj = self.fault_injector
+        if inj is not None:
+            spec = inj.fires(_faults.SITE_STRAGGLER, self._tick)
+            if spec is not None:
+                self._faults.straggler_ticks += 1
+                time.sleep(float(spec.get("seconds", 0.0)))
+        if self.enforce_deadlines:
+            expired, inadmissible = self.queue.shed_hopeless(
+                self._tick, self.batch_size
+            )
+            self._faults.shed_expired += len(expired)
+            self._faults.shed_inadmissible += len(inadmissible)
+            for req in expired:
+                self._deadline_misses += 1
+                self._failures[req.rid] = (
+                    f"shed: already past deadline {req.deadline} "
+                    f"at tick {self._tick}"
+                )
+            for req in inadmissible:
+                self._deadline_misses += 1
+                self._failures[req.rid] = (
+                    f"shed: cannot complete by deadline {req.deadline} "
+                    f"from tick {self._tick}"
+                )
         record = None
         if self._should_dispatch() or (force and len(self.queue)):
             batch = self.queue.pop_batch(self.batch_size, self._tick)
@@ -381,12 +579,34 @@ class ContinuousBatcher:
 
                 pad_to = quantize_width(len(batch), self.width_classes)
             out, estats = self.engine.step(pad_to=pad_to)
+            self._faults.retried_steps += int(estats.get("retries", 0))
+            if out is None or estats.get("failed"):
+                # Panel lost after retry exhaustion: fail its requests
+                # individually and keep serving — a dead step must not
+                # take the stream down with it.
+                self._faults.failed_steps += 1
+                self._faults.failed += len(batch)
+                reason = (
+                    f"step failed: {estats.get('error') or 'unknown error'}"
+                )
+                for req in batch:
+                    self._failures[req.rid] = reason
+                self._tick += 1
+                return None
+            quarantined = set(estats.get("quarantined_request_ids") or ())
             done_tick = self._tick + 1  # service completes at tick end
             for j, req in enumerate(batch):
+                if req.rid in quarantined:
+                    self._faults.quarantined += 1
+                    self._failures[req.rid] = (
+                        "quarantined: non-finite output column"
+                    )
+                    continue
                 self._results[req.rid] = out[:, j]
                 self._latencies[req.rid] = done_tick - req.arrival
                 if req.deadline is not None and done_tick > req.deadline:
                     self._deadline_misses += 1
+                    self._faults.completed_late += 1
             plan_stats = estats.get("plan") or {}
             record = StepRecord(
                 tick=self._tick,
@@ -398,6 +618,10 @@ class ContinuousBatcher:
                 resident=estats["resident"],
                 width_class=plan_stats.get("width_class"),
                 plan_cache_hit=plan_stats.get("cache_hit"),
+                retries=int(estats.get("retries", 0)),
+                quarantined=len(quarantined),
+                plan_level=plan_stats.get("level"),
+                degraded=bool(plan_stats.get("degraded", False)),
             )
             self._steps.append(record)
         else:
@@ -427,7 +651,7 @@ class ContinuousBatcher:
     def stats(self) -> ServeStats:
         return ServeStats.from_steps(
             self._steps, self._latencies, self._deadline_misses,
-            self._idle_ticks,
+            self._idle_ticks, faults=self._faults,
         )
 
 
@@ -570,7 +794,9 @@ def compare_static_continuous(
 __all__ = [
     "Request",
     "RequestQueue",
+    "QueueFull",
     "StepRecord",
+    "FaultCounters",
     "ServeStats",
     "ContinuousBatcher",
     "poissonish_trace",

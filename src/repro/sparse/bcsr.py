@@ -189,6 +189,114 @@ class BlockCSRMatrix:
             self.block_shape,
         )
 
+    # --- integrity --------------------------------------------------------
+    def validate(self, *, name: str = "") -> "BlockCSRMatrix":
+        """Check the layout invariants; raise ValueError with a precise
+        message on the first violation, return ``self`` when clean.
+
+        Host-side (syncs the index arrays once) — call it at trust
+        boundaries: checkpoint restore, engine construction — not per
+        step. Checked: shape/block divisibility, index-array shapes,
+        ``row_ptr`` monotone from 0 to nnz, validity a contiguous
+        prefix, in-bounds ``row_id``/``col_idx``, blocks stored
+        row-major with strictly ascending columns within a block-row,
+        ``row_ptr`` consistent with per-row block counts, and finite
+        stored values.
+        """
+        label = name or f"BlockCSRMatrix{self.shape}"
+        m, n = self.shape
+        bs_r, bs_c = self.block_shape
+        if m % bs_r or n % bs_c:
+            raise ValueError(
+                f"{label}: shape {self.shape} not divisible by block "
+                f"{self.block_shape}"
+            )
+        nrb, ncb = self.n_row_blocks, self.n_col_blocks
+        values = np.asarray(jax.device_get(self.values))
+        row_ptr = np.asarray(jax.device_get(self.row_ptr))
+        row_id = np.asarray(jax.device_get(self.row_id))
+        col_idx = np.asarray(jax.device_get(self.col_idx))
+        valid = np.asarray(jax.device_get(self.valid)).astype(bool)
+        total = values.shape[0]
+        if values.shape != (total, bs_r, bs_c):
+            raise ValueError(
+                f"{label}: values shape {values.shape} != "
+                f"({total}, {bs_r}, {bs_c})"
+            )
+        for arr_name, arr in (("row_id", row_id), ("col_idx", col_idx),
+                              ("valid", valid)):
+            if arr.shape != (total,):
+                raise ValueError(
+                    f"{label}: {arr_name} shape {arr.shape} != ({total},)"
+                )
+        if row_ptr.shape != (nrb + 1,):
+            raise ValueError(
+                f"{label}: row_ptr shape {row_ptr.shape} != ({nrb + 1},)"
+            )
+        if row_ptr[0] != 0:
+            raise ValueError(f"{label}: row_ptr[0] = {row_ptr[0]}, expected 0")
+        if np.any(np.diff(row_ptr) < 0):
+            i = int(np.argmax(np.diff(row_ptr) < 0))
+            raise ValueError(
+                f"{label}: row_ptr not monotone at block-row {i} "
+                f"({row_ptr[i]} -> {row_ptr[i + 1]})"
+            )
+        nnz = int(valid.sum())
+        if int(row_ptr[-1]) != nnz:
+            raise ValueError(
+                f"{label}: row_ptr[-1] = {int(row_ptr[-1])} != valid block "
+                f"count {nnz}"
+            )
+        if np.any(valid[1:] & ~valid[:-1]):
+            raise ValueError(
+                f"{label}: valid mask is not a contiguous prefix (a valid "
+                "block follows an invalid slot)"
+            )
+        if np.any((row_id < 0) | (row_id >= nrb)):
+            bad = int(np.argmax((row_id < 0) | (row_id >= nrb)))
+            raise ValueError(
+                f"{label}: row_id[{bad}] = {int(row_id[bad])} out of "
+                f"[0, {nrb})"
+            )
+        rows, cols = row_id[:nnz], col_idx[:nnz]
+        if nnz and np.any((cols < 0) | (cols >= ncb)):
+            bad = int(np.argmax((cols < 0) | (cols >= ncb)))
+            raise ValueError(
+                f"{label}: col_idx[{bad}] = {int(cols[bad])} out of "
+                f"[0, {ncb})"
+            )
+        if nnz > 1:
+            if np.any(rows[1:] < rows[:-1]):
+                bad = int(np.argmax(rows[1:] < rows[:-1]))
+                raise ValueError(
+                    f"{label}: blocks not stored row-major (row_id drops "
+                    f"{int(rows[bad])} -> {int(rows[bad + 1])} at slot "
+                    f"{bad + 1})"
+                )
+            same_row = rows[1:] == rows[:-1]
+            if np.any(same_row & (cols[1:] <= cols[:-1])):
+                bad = int(np.argmax(same_row & (cols[1:] <= cols[:-1])))
+                raise ValueError(
+                    f"{label}: col_idx not strictly ascending within "
+                    f"block-row {int(rows[bad])} (slot {bad}: "
+                    f"{int(cols[bad])} -> {int(cols[bad + 1])})"
+                )
+        counts = np.bincount(rows, minlength=nrb) if nnz else np.zeros(nrb, int)
+        if not np.array_equal(np.cumsum(counts), row_ptr[1:]):
+            bad = int(np.argmax(np.cumsum(counts) != row_ptr[1:]))
+            raise ValueError(
+                f"{label}: row_ptr inconsistent with row_id counts at "
+                f"block-row {bad}"
+            )
+        if nnz and not np.isfinite(values[:nnz]).all():
+            flat = np.isfinite(values[:nnz]).all(axis=(1, 2))
+            bad = int(np.argmax(~flat))
+            raise ValueError(
+                f"{label}: non-finite value in stored block {bad} "
+                f"(block-row {int(rows[bad])}, block-col {int(cols[bad])})"
+            )
+        return self
+
     # --- conversions ------------------------------------------------------
     @classmethod
     def from_bsr(

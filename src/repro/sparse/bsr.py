@@ -119,6 +119,77 @@ class BlockSparseMatrix:
             blocks, self.col_idx, self.block_mask, self.shape, self.block_shape
         )
 
+    # --- integrity --------------------------------------------------------
+    def validate(self, *, name: str = "") -> "BlockSparseMatrix":
+        """Check the ELL layout invariants; raise ValueError with a
+        precise message on the first violation, return ``self`` clean.
+
+        Host-side (syncs the index arrays once) — call at trust
+        boundaries (checkpoint restore, engine construction), not per
+        step. Checked: shape/block divisibility, array-shape agreement,
+        per-row masks a contiguous prefix, in-bounds and strictly
+        ascending masked column indices, and finite masked values.
+        """
+        label = name or f"BlockSparseMatrix{self.shape}"
+        m, n = self.shape
+        bs_r, bs_c = self.block_shape
+        if m % bs_r or n % bs_c:
+            raise ValueError(
+                f"{label}: shape {self.shape} not divisible by block "
+                f"{self.block_shape}"
+            )
+        nrb, ncb = self.n_row_blocks, self.n_col_blocks
+        blocks = np.asarray(jax.device_get(self.blocks))
+        col_idx = np.asarray(jax.device_get(self.col_idx))
+        mask = np.asarray(jax.device_get(self.block_mask)).astype(bool)
+        mbpr = col_idx.shape[1] if col_idx.ndim == 2 else -1
+        if col_idx.shape != (nrb, mbpr) or mask.shape != (nrb, mbpr):
+            raise ValueError(
+                f"{label}: col_idx {col_idx.shape} / block_mask "
+                f"{mask.shape} must both be ({nrb}, max_blocks_per_row)"
+            )
+        if blocks.shape != (nrb, mbpr, bs_r, bs_c):
+            raise ValueError(
+                f"{label}: blocks shape {blocks.shape} != "
+                f"({nrb}, {mbpr}, {bs_r}, {bs_c})"
+            )
+        if mbpr > 1 and np.any(mask[:, 1:] & ~mask[:, :-1]):
+            row = int(np.argmax((mask[:, 1:] & ~mask[:, :-1]).any(axis=1)))
+            raise ValueError(
+                f"{label}: block_mask of block-row {row} is not a "
+                "contiguous prefix (a valid slot follows padding)"
+            )
+        oob = mask & ((col_idx < 0) | (col_idx >= ncb))
+        if np.any(oob):
+            row = int(np.argmax(oob.any(axis=1)))
+            slot = int(np.argmax(oob[row]))
+            raise ValueError(
+                f"{label}: col_idx[{row}, {slot}] = "
+                f"{int(col_idx[row, slot])} out of [0, {ncb})"
+            )
+        if mbpr > 1:
+            # prefix masks ⇒ mask[:, 1:] implies mask[:, :-1]
+            unsorted = mask[:, 1:] & (col_idx[:, 1:] <= col_idx[:, :-1])
+            if np.any(unsorted):
+                row = int(np.argmax(unsorted.any(axis=1)))
+                slot = int(np.argmax(unsorted[row]))
+                raise ValueError(
+                    f"{label}: col_idx not strictly ascending within "
+                    f"block-row {row} (slot {slot}: "
+                    f"{int(col_idx[row, slot])} -> "
+                    f"{int(col_idx[row, slot + 1])})"
+                )
+        bad = mask & ~np.isfinite(blocks).all(axis=(2, 3))
+        if np.any(bad):
+            row = int(np.argmax(bad.any(axis=1)))
+            slot = int(np.argmax(bad[row]))
+            raise ValueError(
+                f"{label}: non-finite value in stored block at "
+                f"block-row {row}, slot {slot} "
+                f"(block-col {int(col_idx[row, slot])})"
+            )
+        return self
+
     # --- conversions ------------------------------------------------------
     @classmethod
     def from_dense(

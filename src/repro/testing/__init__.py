@@ -1,0 +1,39 @@
+"""Test/robustness harnesses that ship with the library.
+
+``repro.testing.faults`` is the deterministic fault-injection layer
+(docs/robustness.md): the serving engine, the continuous batcher, and
+the resilient train loop each poll it at named sites, so tests and the
+benchmark's ``faults`` arm can script exact failure sequences.
+"""
+
+from repro.testing.faults import (  # noqa: F401
+    ALL_SITES,
+    SITE_CACHE_EVICTION,
+    SITE_PANEL_NANS,
+    SITE_PLAN_COMPILE,
+    SITE_SHARD_FAILURE,
+    SITE_STEP_TRANSIENT,
+    SITE_STRAGGLER,
+    SITE_TRAIN_NAN_LOSS,
+    FaultEvent,
+    FaultInjector,
+    InjectedFault,
+    TransientFault,
+    poison_panel,
+)
+
+__all__ = [
+    "ALL_SITES",
+    "SITE_CACHE_EVICTION",
+    "SITE_PANEL_NANS",
+    "SITE_PLAN_COMPILE",
+    "SITE_SHARD_FAILURE",
+    "SITE_STEP_TRANSIENT",
+    "SITE_STRAGGLER",
+    "SITE_TRAIN_NAN_LOSS",
+    "FaultEvent",
+    "FaultInjector",
+    "InjectedFault",
+    "TransientFault",
+    "poison_panel",
+]

@@ -1,0 +1,159 @@
+"""Deterministic fault injection for the serving/training stack.
+
+Production-scale sparse-DNN serving (the ROADMAP's north star) fails in
+a handful of recurring ways: a request column goes non-finite and
+poisons its packed panel, a mesh shard dies mid-stream, a plan compile
+blows the VMEM guard, a cache eviction storm forces recompiles, a node
+straggles. This module makes every one of those *scriptable*: faults
+are **scheduled**, never sampled — a :class:`FaultInjector` holds a map
+``(site, when) → payload`` armed by tests/benchmarks, and each
+subsystem polls :meth:`FaultInjector.fires` at its named injection site
+with its own monotonic counter:
+
+=========================  ============================================
+site                       ``when`` counter (owner)
+=========================  ============================================
+``SITE_PANEL_NANS``        engine dispatch ordinal (``SparseDNNEngine``)
+``SITE_STEP_TRANSIENT``    engine dispatch ordinal
+``SITE_PLAN_COMPILE``      engine dispatch ordinal
+``SITE_CACHE_EVICTION``    engine dispatch ordinal
+``SITE_SHARD_FAILURE``     engine dispatch ordinal
+``SITE_STRAGGLER``         scheduler tick (``ContinuousBatcher``)
+``SITE_TRAIN_NAN_LOSS``    train step (``train.resilience``)
+=========================  ============================================
+
+A fired fault is consumed (popped) and logged in :attr:`FaultInjector.
+fired`, so one ``schedule`` call produces exactly one fault — same
+schedule + same trace → the same faulted run, bit for bit. Randomness
+(e.g. which panel columns to poison) comes from the injector's own
+seeded generator, never global state. See docs/robustness.md for the
+full fault model and how each subsystem degrades.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+SITE_PANEL_NANS = "panel-nans"
+SITE_STEP_TRANSIENT = "step-transient"
+SITE_PLAN_COMPILE = "plan-compile"
+SITE_CACHE_EVICTION = "cache-eviction"
+SITE_SHARD_FAILURE = "shard-failure"
+SITE_STRAGGLER = "straggler"
+SITE_TRAIN_NAN_LOSS = "train-nan-loss"
+
+ALL_SITES = (
+    SITE_PANEL_NANS,
+    SITE_STEP_TRANSIENT,
+    SITE_PLAN_COMPILE,
+    SITE_CACHE_EVICTION,
+    SITE_SHARD_FAILURE,
+    SITE_STRAGGLER,
+    SITE_TRAIN_NAN_LOSS,
+)
+
+
+class InjectedFault(RuntimeError):
+    """A scripted failure fired by the injector (not retryable)."""
+
+
+class TransientFault(InjectedFault):
+    """A scripted failure the engine is allowed to retry."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One consumed fault — the injector's audit log entry."""
+
+    site: str
+    when: int
+    payload: dict
+
+
+class FaultInjector:
+    """Seeded, scheduled fault source shared across subsystems.
+
+    ``schedule(site, when, **payload)`` arms one fault; the owning
+    subsystem's ``fires(site, when)`` pops and returns the payload (or
+    None). Multiple faults may be armed at the same (site, when); they
+    pop in schedule order, one per ``fires`` call.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self._scheduled: dict[tuple[str, int], list[dict]] = {}
+        self.fired: list[FaultEvent] = []
+
+    def schedule(self, site: str, when: int, **payload) -> None:
+        if site not in ALL_SITES:
+            raise ValueError(f"unknown fault site {site!r}; one of {ALL_SITES}")
+        if when < 0:
+            raise ValueError(f"when must be >= 0, got {when}")
+        self._scheduled.setdefault((site, int(when)), []).append(dict(payload))
+
+    def fires(self, site: str, when: int) -> dict | None:
+        """Pop-and-log the next fault armed at (site, when), if any."""
+        queue = self._scheduled.get((site, int(when)))
+        if not queue:
+            return None
+        payload = queue.pop(0)
+        if not queue:
+            del self._scheduled[(site, int(when))]
+        self.fired.append(FaultEvent(site, int(when), dict(payload)))
+        return payload
+
+    def pending(self, site: str | None = None) -> int:
+        """Armed-but-unfired fault count (optionally one site's)."""
+        return sum(
+            len(q)
+            for (s, _), q in self._scheduled.items()
+            if site is None or s == site
+        )
+
+    def fired_at(self, site: str) -> list[FaultEvent]:
+        return [e for e in self.fired if e.site == site]
+
+
+def poison_panel(
+    panel,
+    *,
+    columns=None,
+    count: int = 1,
+    mode: str = "nan",
+    limit: int | None = None,
+    rng=None,
+):
+    """Inject non-finite values into whole columns of an (m, k) panel.
+
+    Returns ``(poisoned_panel, columns)``. Columns are poisoned whole
+    because the serving panel is column-batched (one request per
+    column) — a poisoned request corrupts exactly its own column, which
+    is what the engine's per-request quarantine relies on. ``limit``
+    restricts the choice to the first ``limit`` columns (the real,
+    non-pad requests). ``mode``: ``"nan"`` (propagates unconditionally
+    through the ReLU stack) or ``"inf"``.
+    """
+    if mode not in ("nan", "inf"):
+        raise ValueError(f"mode must be 'nan' or 'inf', got {mode!r}")
+    k = panel.shape[1]
+    hi = k if limit is None else min(int(limit), k)
+    if columns is None:
+        if hi < 1:
+            return panel, ()
+        rng = np.random.default_rng(0) if rng is None else rng
+        count = min(int(count), hi)
+        columns = sorted(int(c) for c in rng.choice(hi, size=count, replace=False))
+    else:
+        columns = sorted(int(c) for c in columns)
+        bad = [c for c in columns if not 0 <= c < hi]
+        if bad:
+            raise ValueError(f"columns {bad} out of range [0, {hi})")
+    if not columns:
+        return panel, ()
+    value = float("nan") if mode == "nan" else float("inf")
+    panel = jnp.asarray(panel).at[:, jnp.asarray(columns)].set(value)
+    return panel, tuple(columns)

@@ -1,4 +1,9 @@
 from repro.train.optimizer import adamw, sgd  # noqa: F401
+from repro.train.resilience import (  # noqa: F401
+    NonFiniteLossError,
+    run_resilient_training,
+    validate_sparse_state,
+)
 from repro.train.sparse import (  # noqa: F401
     SparseMLPState,
     init_sparse_mlp_state,

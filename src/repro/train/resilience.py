@@ -1,0 +1,169 @@
+"""Fault-tolerant sparse training: Supervisor + checkpoints wired into
+the sparse-MLP loop (docs/robustness.md).
+
+``run_resilient_training`` drives :func:`repro.train.sparse.
+make_sparse_train_step` under :class:`repro.train.fault_tolerance.
+Supervisor` with :mod:`repro.train.checkpoint` as the restore source:
+
+* sparse layouts (block-CSR / ELL-BSR pytrees) checkpoint and restore
+  **exactly** — float32 values round-trip bit-identically through the
+  npz payload and integer topology leaves keep their dtypes, so a
+  resumed run replays the same losses to the last bit;
+* a non-finite loss raises :class:`NonFiniteLossError` BEFORE the
+  poisoned update is committed; the Supervisor restores the last good
+  checkpoint and replays — because the batch pipeline is deterministic
+  in ``step`` (and an injected fault fires only once), the replay is
+  clean: restore-and-skip, with the discarded attempts reported;
+* every restore re-validates the restored layouts
+  (:func:`validate_sparse_state`) so a corrupt checkpoint fails loudly
+  at the restore boundary, not as silent garbage ten steps later.
+
+Kill-and-resume: call again with ``resume=True`` (the default) on a
+directory holding checkpoints and training continues from the latest
+manifest step — the bit-identical-replay property tested in
+``tests/test_train_resilience.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.testing import faults as _faults
+from repro.train import checkpoint
+from repro.train.fault_tolerance import StragglerPolicy, Supervisor
+from repro.train.optimizer import Optimizer
+from repro.train.sparse import SparseMLPState, make_sparse_train_step
+
+
+class NonFiniteLossError(RuntimeError):
+    """Loss went NaN/Inf: the in-flight update must not be committed."""
+
+
+def validate_sparse_state(
+    state: SparseMLPState, *, name: str = "SparseMLPState"
+) -> SparseMLPState:
+    """Validate every layer of a sparse training state: structural
+    layout invariants for sparse weights (``validate()``), finiteness
+    for dense weights and biases. Returns ``state``; raises ValueError
+    naming the offending layer. Called on every checkpoint restore."""
+    for i, w in enumerate(state.weights):
+        if hasattr(w, "validate"):
+            w.validate(name=f"{name} layer {i} weight")
+        elif not bool(jnp.isfinite(w).all()):
+            raise ValueError(
+                f"{name} layer {i} weight has non-finite entries"
+            )
+    for i, b in enumerate(state.biases):
+        if not bool(jnp.isfinite(b).all()):
+            raise ValueError(f"{name} layer {i} bias has non-finite entries")
+    return state
+
+
+def run_resilient_training(
+    state: SparseMLPState,
+    batch_fn: Callable[[int], dict],
+    optimizer: Optimizer,
+    num_steps: int,
+    ckpt_dir: str,
+    *,
+    ckpt_interval: int = 10,
+    max_restarts: int = 3,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    plan: Any = None,
+    fault_injector: Any = None,
+    straggler: StragglerPolicy | None = None,
+    resume: bool = True,
+    metadata: dict | None = None,
+) -> tuple[SparseMLPState, dict]:
+    """Train the sparse stack for ``num_steps`` with checkpoint/restart.
+
+    ``batch_fn(step) -> {"y0": ..., "targets": ...}`` MUST be
+    deterministic in ``step`` — that determinism is the whole recovery
+    story (DESIGN.md §6): a restart replays the exact batch stream, so
+    restored runs are bit-identical to never-failed ones.
+
+    ``fault_injector`` is polled at ``SITE_TRAIN_NAN_LOSS`` per step; a
+    fire poisons that step's batch, which surfaces as a non-finite loss
+    → restore-and-skip. Returns ``(final_state, report)`` where report
+    has ``losses`` (step → float loss, replayed steps overwritten with
+    identical values), ``skipped`` (steps whose poisoned attempt was
+    discarded), ``restarts`` (Supervisor fault history), and
+    ``start_step`` (where this call actually began).
+    """
+    if num_steps < 1:
+        raise ValueError("num_steps must be >= 1")
+    validate_sparse_state(state)
+    train_step = jax.jit(
+        make_sparse_train_step(
+            optimizer, use_kernel=use_kernel, interpret=interpret, plan=plan
+        )
+    )
+
+    losses: dict[int, float] = {}
+    poisoned: set[int] = set()
+
+    def step_fn(st: SparseMLPState, step: int) -> SparseMLPState:
+        batch = batch_fn(step)
+        if fault_injector is not None:
+            spec = fault_injector.fires(_faults.SITE_TRAIN_NAN_LOSS, step)
+            if spec is not None:
+                poisoned.add(step)
+                batch = dict(batch)
+                batch["y0"] = batch["y0"].at[0, 0].set(float("nan"))
+        new_st, metrics = train_step(st, batch)
+        loss = float(metrics["loss"])
+        if not math.isfinite(loss):
+            # Raise BEFORE the Supervisor commits new_st: the poisoned
+            # update dies here and the restore path takes over.
+            raise NonFiniteLossError(f"loss={loss} at step {step}")
+        losses[step] = loss
+        return new_st
+
+    def load_state(tree: SparseMLPState) -> SparseMLPState:
+        return validate_sparse_state(tree, name="restored SparseMLPState")
+
+    start_step = 0
+    last = checkpoint.latest_step(ckpt_dir)
+    if resume and last is not None:
+        restored, manifest = checkpoint.restore(ckpt_dir, state)
+        state = load_state(restored)
+        start_step = int(manifest["step"])
+    elif last is None:
+        # Seed the restore path: a fault on the very first steps needs
+        # a step-0 checkpoint to fall back to.
+        checkpoint.save(
+            ckpt_dir, 0, state,
+            metadata={**(metadata or {}), "initial": True},
+        )
+
+    sup = Supervisor(
+        step_fn=step_fn,
+        save_state=lambda st: st,
+        load_state=load_state,
+        ckpt_dir=ckpt_dir,
+        ckpt_interval=ckpt_interval,
+        max_restarts=max_restarts,
+        straggler=straggler,
+        metadata=metadata,
+    )
+    final = sup.run(state, num_steps, start_step=start_step)
+    report = {
+        "losses": dict(sorted(losses.items())),
+        "skipped": sorted(poisoned),
+        "restarts": [h for h in sup.history if h[1].startswith("fault")],
+        "start_step": start_step,
+        "final_step": num_steps,
+    }
+    return final, report
+
+
+__all__ = [
+    "NonFiniteLossError",
+    "run_resilient_training",
+    "validate_sparse_state",
+]

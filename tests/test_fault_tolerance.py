@@ -1,0 +1,190 @@
+"""Edge-case coverage for the fault-tolerance primitives themselves:
+StragglerPolicy's rolling window, Supervisor's restore/replay path, and
+checkpoint atomicity / retention (docs/robustness.md). System-level
+wiring into sparse training is in tests/test_train_resilience.py."""
+
+import json
+import os
+import tempfile
+
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint
+from repro.train.fault_tolerance import StragglerPolicy, Supervisor
+
+
+# ---------------------------------------------------------------------
+# StragglerPolicy windows
+# ---------------------------------------------------------------------
+
+
+def test_straggler_warmup_never_fires():
+    """< 4 observations = no median worth trusting: even an absurd
+    outlier cannot fire during warmup."""
+    p = StragglerPolicy(deadline_factor=2.0, evict_after=1)
+    assert p.observe(1.0) is False
+    assert p.observe(1000.0) is False
+    assert p.observe(1000.0) is False
+
+
+def test_straggler_consecutive_resets_on_fast_step():
+    p = StragglerPolicy(deadline_factor=2.0, evict_after=2)
+    for _ in range(6):
+        p.observe(1.0)
+    assert p.observe(10.0) is False  # 1st consecutive mark
+    assert p.observe(1.0) is False  # fast step resets the streak
+    assert p.observe(10.0) is False  # back to 1st mark
+    assert p.observe(10.0) is True  # 2nd consecutive → fire
+
+
+def test_straggler_window_eviction_shifts_median():
+    """Old observations leave the rolling window: once the window is
+    full of slow steps, a slow step is no longer an outlier."""
+    p = StragglerPolicy(deadline_factor=2.0, evict_after=1, window=4)
+    for _ in range(4):
+        p.observe(1.0)
+    assert p.observe(10.0) is True  # outlier vs the fast window
+    for _ in range(4):  # window is now [10, 10, 10, 10]
+        p.observe(10.0)
+    assert p.observe(10.0) is False  # median caught up — not straggling
+
+
+def test_straggler_evict_after_one_fires_immediately():
+    p = StragglerPolicy(deadline_factor=3.0, evict_after=1)
+    for _ in range(4):
+        p.observe(1.0)
+    assert p.observe(3.01) is True  # just past factor × median
+
+
+# ---------------------------------------------------------------------
+# Supervisor restart path
+# ---------------------------------------------------------------------
+
+
+def _counting_supervisor(d, fail_at, *, ckpt_interval=2, max_restarts=3):
+    calls = []
+
+    def step_fn(state, step):
+        calls.append(step)
+        if step == fail_at and calls.count(step) == 1:
+            raise RuntimeError("boom")
+        return {"x": state["x"] + 1.0}
+
+    sup = Supervisor(
+        step_fn=step_fn,
+        save_state=lambda s: s,
+        load_state=lambda s: s,
+        ckpt_dir=d,
+        ckpt_interval=ckpt_interval,
+        max_restarts=max_restarts,
+    )
+    return sup, calls
+
+
+def test_supervisor_replays_from_manifest_step():
+    with tempfile.TemporaryDirectory() as d:
+        state = {"x": jnp.zeros(())}
+        checkpoint.save(d, 0, state)
+        sup, calls = _counting_supervisor(d, fail_at=5)
+        out = sup.run(state, 8)
+        # fault at step 5 → restore ckpt at step 4 → replay 4, 5, ...;
+        # the uncommitted step-5 update is discarded, the final value
+        # counts exactly 8 committed steps.
+        assert float(out["x"]) == 8.0
+        assert calls == [0, 1, 2, 3, 4, 5, 4, 5, 6, 7]
+        assert sup.history == [(5, "fault: RuntimeError")]
+
+
+def test_supervisor_fault_with_no_checkpoint_propagates():
+    with tempfile.TemporaryDirectory() as d:
+        sup, _ = _counting_supervisor(d, fail_at=0)
+        with pytest.raises(RuntimeError, match="boom"):
+            sup.run({"x": jnp.zeros(())}, 4)
+
+
+def test_supervisor_on_straggler_hook_fires():
+    with tempfile.TemporaryDirectory() as d:
+        import time as _time
+
+        hits = []
+        # baseline steps sleep a measurable amount so the rolling median
+        # is dominated by the sleep, not by scheduler jitter
+        sup = Supervisor(
+            step_fn=lambda s, i: (_time.sleep(0.1 if i == 6 else 0.01), s)[1],
+            save_state=lambda s: s,
+            load_state=lambda s: s,
+            ckpt_dir=d,
+            ckpt_interval=100,
+            straggler=StragglerPolicy(deadline_factor=3.0, evict_after=1),
+            on_straggler=hits.append,
+        )
+        sup.run({"x": jnp.zeros(())}, 8)
+        assert 6 in hits
+        assert (6, "straggler") in sup.history
+
+
+# ---------------------------------------------------------------------
+# checkpoint atomicity + retention
+# ---------------------------------------------------------------------
+
+
+def test_save_cleans_stale_tmp_from_crashed_writer():
+    """A crash mid-write leaves tmp.<step> behind; the next save of the
+    same step must clear it and publish atomically."""
+    with tempfile.TemporaryDirectory() as d:
+        stale = os.path.join(d, "tmp.3")
+        os.makedirs(stale)
+        with open(os.path.join(stale, "garbage"), "w") as f:
+            f.write("half-written")
+        path = checkpoint.save(d, 3, {"w": jnp.ones((2, 2))})
+        assert not os.path.exists(stale)  # tmp was consumed by replace
+        assert os.path.isdir(path)
+        assert not os.path.exists(os.path.join(path, "garbage"))
+        restored, manifest = checkpoint.restore(
+            d, {"w": jnp.zeros((2, 2))}, step=3
+        )
+        assert manifest["step"] == 3
+        assert float(restored["w"].sum()) == 4.0
+
+
+def test_save_replaces_existing_step_dir():
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 1, {"w": jnp.zeros((2,))})
+        checkpoint.save(d, 1, {"w": jnp.ones((2,))})  # same step, new data
+        restored, _ = checkpoint.restore(d, {"w": jnp.zeros((2,))})
+        assert float(restored["w"].sum()) == 2.0
+        # exactly one published dir, no tmp residue
+        assert sorted(os.listdir(d)) == ["step_00000001"]
+
+
+def test_retention_keep_every_protects_multiples():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(1, 11):
+            checkpoint.save(d, s, {"w": jnp.zeros(())})
+        checkpoint.retention(d, keep_last=2, keep_every=4)
+        kept = sorted(
+            int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_")
+        )
+        assert kept == [4, 8, 9, 10]  # multiples of 4 + newest 2
+        assert checkpoint.latest_step(d) == 10
+
+
+def test_retention_and_latest_on_missing_dir_are_noops():
+    missing = os.path.join(tempfile.gettempdir(), "no-such-ckpt-dir-xyz")
+    checkpoint.retention(missing, keep_last=1)  # must not raise
+    assert checkpoint.latest_step(missing) is None
+
+
+def test_manifest_carries_metadata_and_keys():
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(
+            d, 2, {"a": jnp.zeros((2,)), "b": jnp.ones((3,))},
+            metadata={"arch": "sparse-mlp"},
+        )
+        with open(os.path.join(d, "step_00000002", "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["step"] == 2
+        assert manifest["arch"] == "sparse-mlp"
+        assert manifest["num_leaves"] == 2
+        assert manifest["keys"] == ["a", "b"]

@@ -220,17 +220,47 @@ def test_servestats_hand_computed():
 
 
 def test_deadline_miss_accounting():
+    """A request that cannot make its deadline is SHED at packing time —
+    a deadline miss, never a (late) completion. docs/robustness.md."""
     m = 32
     ws, bs = _stack(jax.random.PRNGKey(5), 2, m)
     eng = SparseDNNEngine(ws, bs, batch_align=4)
     b = ContinuousBatcher(eng, batch_size=4, min_fill=1.0, max_wait=5)
-    b.submit(_col(0, m), deadline=1)  # will complete at tick 6 > 1
+    rid0 = b.submit(_col(0, m), deadline=1)  # admissible at tick 0, but
+    b.submit(_col(1, m), deadline=50)  # min_fill holds the panel...
+    for _ in range(6):
+        b.step()
+    s = b.stats()
+    # ...so at tick 1 its earliest completion is tick 2 > deadline 1:
+    # shed as inadmissible, never dispatched, counted as a miss.
+    assert s.requests == 1
+    assert s.deadline_misses == 1
+    assert s.faults.shed_inadmissible == 1
+    assert s.faults.shed_expired == 0
+    assert s.goodput == pytest.approx(0.5)
+    assert "shed" in b.failures[rid0]
+    assert rid0 not in s.latencies
+
+
+def test_deadline_enforcement_off_serves_late():
+    """enforce_deadlines=False restores the legacy record-only miss."""
+    m = 32
+    ws, bs = _stack(jax.random.PRNGKey(5), 2, m)
+    eng = SparseDNNEngine(ws, bs, batch_align=4)
+    b = ContinuousBatcher(
+        eng, batch_size=4, min_fill=1.0, max_wait=5,
+        enforce_deadlines=False,
+    )
+    b.submit(_col(0, m), deadline=1)
     b.submit(_col(1, m), deadline=50)
     for _ in range(6):
         b.step()
     s = b.stats()
-    assert s.requests == 2
+    assert s.requests == 2  # served anyway, just late
     assert s.deadline_misses == 1
+    assert s.faults.shed == 0
+    assert s.faults.completed_late == 1
+    assert s.goodput == pytest.approx(0.5)
 
 
 def test_static_baseline_accounting():

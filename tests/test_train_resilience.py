@@ -1,0 +1,173 @@
+"""Resilient sparse training (docs/robustness.md): sparse layouts
+checkpoint/restore EXACTLY, a NaN loss triggers restore-and-skip
+without committing the poisoned update, killed-and-resumed runs replay
+bit-identical losses, and every restore re-validates the layouts."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import BlockCSRMatrix, BlockSparseMatrix
+from repro.testing import SITE_TRAIN_NAN_LOSS, FaultInjector
+from repro.train import checkpoint
+from repro.train.optimizer import sgd
+from repro.train.resilience import (
+    run_resilient_training,
+    validate_sparse_state,
+)
+from repro.train.sparse import SparseMLPState, init_sparse_mlp_state
+
+
+def _state(seed=0, m=32, block=8, bpr=2):
+    ws = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(seed), (m, m), (block, block),
+            blocks_per_row=bpr, minval=-0.5, maxval=0.5,
+        ),
+        BlockCSRMatrix.from_bsr(
+            BlockSparseMatrix.random(
+                jax.random.PRNGKey(seed + 1), (m, m), (block, block),
+                blocks_per_row=bpr, minval=-0.5, maxval=0.5,
+            )
+        ),
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in ws]
+    return init_sparse_mlp_state(ws, bs, _opt()), m
+
+
+def _opt():
+    return sgd(0.5, momentum=0.0)
+
+
+def _batch_fn(m):
+    # deterministic in step — the recovery contract (DESIGN.md §6)
+    def fn(step):
+        k = jax.random.PRNGKey(1000 + step)
+        y0 = jax.random.uniform(k, (m, 8), jnp.float32)
+        return {"y0": y0, "targets": 0.3 * y0}
+
+    return fn
+
+
+def test_sparse_state_checkpoints_exactly():
+    """Block-CSR / ELL layouts round-trip through a checkpoint bit for
+    bit: float32 values exact, integer topology dtypes preserved."""
+    state, _ = _state()
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 7, state)
+        restored, manifest = checkpoint.restore(d, state)
+        assert manifest["step"] == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        # restored layouts still satisfy every structural invariant
+        validate_sparse_state(restored)
+        assert isinstance(restored.weights[1], BlockCSRMatrix)
+
+
+def test_validate_sparse_state_catches_corruption():
+    import dataclasses
+
+    state, _ = _state()
+    bad_w = dataclasses.replace(
+        state.weights[1],
+        col_idx=state.weights[1].col_idx.at[0].set(10_000),
+    )
+    bad = SparseMLPState(
+        (state.weights[0], bad_w), state.biases, state.opt
+    )
+    with pytest.raises(ValueError, match="layer 1"):
+        validate_sparse_state(bad)
+    nan_bias = SparseMLPState(
+        state.weights,
+        (state.biases[0].at[0].set(float("nan")), state.biases[1]),
+        state.opt,
+    )
+    with pytest.raises(ValueError, match="bias"):
+        validate_sparse_state(nan_bias)
+
+
+def test_nan_loss_restores_and_skips():
+    state, m = _state(seed=2)
+    inj = FaultInjector()
+    inj.schedule(SITE_TRAIN_NAN_LOSS, 3)
+    with tempfile.TemporaryDirectory() as d:
+        final, report = run_resilient_training(
+            state, _batch_fn(m), _opt(), 6, d,
+            ckpt_interval=2, use_kernel=False, fault_injector=inj,
+        )
+        # the poisoned attempt at step 3 was discarded and replayed clean
+        assert report["skipped"] == [3]
+        assert len(report["restarts"]) == 1
+        assert report["restarts"][0][1] == "fault: NonFiniteLossError"
+        assert sorted(report["losses"]) == [0, 1, 2, 3, 4, 5]
+        assert all(np.isfinite(v) for v in report["losses"].values())
+        # ...and the final state matches a never-faulted run exactly
+        clean, _ = run_resilient_training(
+            _state(seed=2)[0], _batch_fn(m), _opt(), 6,
+            os.path.join(d, "clean"), ckpt_interval=2, use_kernel=False,
+        )
+        for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(clean)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kill_and_resume_replays_bit_identical_losses():
+    state, m = _state(seed=3)
+    with tempfile.TemporaryDirectory() as d:
+        # reference: one uninterrupted run
+        _, ref = run_resilient_training(
+            _state(seed=3)[0], _batch_fn(m), _opt(), 8,
+            os.path.join(d, "ref"), ckpt_interval=2, use_kernel=False,
+        )
+        # "killed" run: stop after 5 steps (last checkpoint at step 4)...
+        run_a = os.path.join(d, "killed")
+        _, part = run_resilient_training(
+            state, _batch_fn(m), _opt(), 5, run_a,
+            ckpt_interval=2, use_kernel=False,
+        )
+        assert checkpoint.latest_step(run_a) == 5  # final-step save
+        # ...then resume from the directory with a FRESH initial state
+        # (the checkpoint, not the caller's arrays, must carry the run)
+        final, rest = run_resilient_training(
+            _state(seed=3)[0], _batch_fn(m), _opt(), 8, run_a,
+            ckpt_interval=2, use_kernel=False,
+        )
+        assert rest["start_step"] == 5
+        merged = {**part["losses"], **rest["losses"]}
+        assert merged == ref["losses"]  # float equality — bit-identical
+
+
+def test_resilient_training_with_kernels_in_path():
+    """The Pallas kernels (and their custom VJPs) survive the same
+    restore path — smoke-sized."""
+    state, m = _state(seed=4)
+    inj = FaultInjector()
+    inj.schedule(SITE_TRAIN_NAN_LOSS, 1)
+    with tempfile.TemporaryDirectory() as d:
+        _, report = run_resilient_training(
+            state, _batch_fn(m), _opt(), 3, d,
+            ckpt_interval=1, use_kernel=True, fault_injector=inj,
+        )
+        assert report["skipped"] == [1]
+        assert sorted(report["losses"]) == [0, 1, 2]
+        assert all(np.isfinite(v) for v in report["losses"].values())
+
+
+def test_restore_validation_rejects_corrupt_checkpoint():
+    state, m = _state(seed=5)
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 2, state)
+        # corrupt the stored values in place: NaN into the npz payload
+        path = os.path.join(d, "step_00000002", "arrays.npz")
+        arrays = dict(np.load(path))
+        key = "biases//0"
+        arrays[key] = np.full_like(arrays[key], np.nan)
+        np.savez(path, **arrays)
+        with pytest.raises(ValueError, match="restored SparseMLPState"):
+            run_resilient_training(
+                state, _batch_fn(m), _opt(), 4, d, use_kernel=False,
+            )

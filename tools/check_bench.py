@@ -71,6 +71,15 @@ PARAMS = {
         "train_params",
     ),
     "sharded": ("m", "layers", "block", "blocks_per_row", "n", "shards"),
+    "faults": (
+        "m",
+        "layers",
+        "blocks_per_row",
+        "requests",
+        "batch_size",
+        "tile_align",
+        "seed",
+    ),
 }
 
 EXACT = {
@@ -133,6 +142,35 @@ SHARDED_EXACT = (
     "imbalance",
     "critical_path_steps",
     "parallel_speedup_bound",
+)
+# Robustness arm (fault injection + graceful degradation): every fault
+# is SCHEDULED, so the whole faulted run is deterministic — loss
+# buckets, goodput, degradation levels and the train replay are all
+# checked exactly; wall-clock tolerantly. New fields get warn+SKIP
+# against older baselines (same convention as plan/sharded).
+FAULTS_SERVE_EXACT = (
+    "completed",
+    "engine_steps",
+    "deadline_misses",
+    "goodput",
+    "faults",
+    "shed_fraction",
+    "injector_fired",
+    "injector_pending",
+)
+FAULTS_DEGRADE_EXACT = (
+    "levels",
+    "recovery_steps",
+    "matches_single_device_after_failure",
+    "ladder_events",
+    "degraded",
+)
+FAULTS_TRAIN_EXACT = (
+    "steps",
+    "skipped_steps",
+    "restarts",
+    "losses_match_clean",
+    "loss_decreased",
 )
 # Deterministic serve accounting, checked exactly for BOTH arms.
 SERVE_EXACT = (
@@ -352,6 +390,52 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
             gate.missing("sharded", "imbalance")
         else:
             gate.no_worse("sharded", "imbalance <= 1.10", 1.10, imbalance)
+
+    # --- faults: scheduled-fault determinism + robustness headlines ---
+    pair = _section_pair(gate, "faults", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for sub, fields in (
+            ("serve", FAULTS_SERVE_EXACT),
+            ("degrade", FAULTS_DEGRADE_EXACT),
+            ("train", FAULTS_TRAIN_EXACT),
+        ):
+            for field in fields:
+                bv = bs.get(sub, {}).get(field)
+                fv = fs.get(sub, {}).get(field)
+                if bv is None:
+                    gate.skip(f"faults.{sub}", f"{field} absent from baseline")
+                    continue
+                if fv is None:
+                    gate.missing(f"faults.{sub}", field)
+                    continue
+                gate.exact(f"faults.{sub}", field, bv, fv)
+        # headline invariants, gated regardless of baseline drift:
+        # goodput holds its floor, shard failure degrades with identical
+        # results, and the NaN-lossed train run replays a clean one
+        goodput = fs.get("serve", {}).get("goodput")
+        if goodput is None:
+            gate.missing("faults", "serve.goodput")
+        else:
+            gate._add(
+                "faults",
+                "serve.goodput >= 0.8",
+                0.8,
+                goodput,
+                "ok" if goodput >= 0.8 else "FAIL",
+            )
+        for sub, field in (
+            ("degrade", "matches_single_device_after_failure"),
+            ("train", "losses_match_clean"),
+        ):
+            ok = fs.get(sub, {}).get(field, False)
+            gate._add(
+                "faults", f"{sub}.{field}", True, ok, "ok" if ok else "FAIL"
+            )
+        wt_b = bs.get("serve", {}).get("wall_time_s")
+        wt_f = fs.get("serve", {}).get("wall_time_s")
+        if wt_b is not None and wt_f is not None:
+            gate.time("faults", "serve.wall_time_s", wt_b, wt_f)
 
     # --- serve: deterministic accounting exact, pad waste gated -------
     pair = _section_pair(gate, "serve", baseline, fresh)

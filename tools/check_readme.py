@@ -30,6 +30,7 @@ README = REPO_ROOT / "README.md"
 # root; README.md is always checked and must contain fences).
 FENCED_DOCS = [
     "docs/architecture.md",
+    "docs/robustness.md",
 ]
 
 # Example scripts with a fast deterministic mode, run by the CI docs job
