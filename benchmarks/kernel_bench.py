@@ -54,6 +54,13 @@ track the trajectory:
           multi-device runtime, so CI's single-CPU bench job gates it
           exactly; the numerics are covered by tests/test_sharded.py
           on an 8-host-device mesh.
+  challenge: the CHALLENGE arm — the GraphChallenge workload shape
+          (RadiX-net topology, fan-in 32, weight 1/16, official bias)
+          streamed through the serving engine on a stack past the VMEM
+          budget (→ the multi-panel tiled fused route), reporting the
+          official edges × inputs / sec metric plus a bit-level
+          conformance check against the numpy ground-truth categories
+          (tests/test_challenge.py is the full suite).
 
 ``--arms`` selects a comma-separated subset (e.g. ``--arms serve`` or
 ``--arms topologies,sharded``) so CI and local runs can execute a
@@ -780,8 +787,74 @@ def faults_arm(
     }
 
 
+def challenge_arm(
+    neurons: int,
+    layers: int,
+    n_inputs: int,
+    panel_width: int,
+    batch_align: int,
+    density: float,
+    seed: int,
+):
+    """The CHALLENGE arm — the GraphChallenge workload end to end.
+
+    A RadiX-net topology (``repro.data.radixnet``: exact fan-in 32,
+    weight 1/16, the official per-size bias) streamed through the
+    serving engine in width-classed panels (``repro.serve.challenge``),
+    reporting the challenge's official rate metric **edges × inputs /
+    second**. The stack is sized past ``VMEM_SOFT_LIMIT_BYTES`` so the
+    plan layer must route it through the multi-panel tiled fused kernel
+    — the run doubles as a conformance check: the engine's answer set
+    must equal the pure-numpy reference's ground-truth categories
+    bit-for-bit. Deterministic topology + seeded inputs → all
+    accounting fields are exact; only wall-clock (and the metric
+    derived from it) varies by runner.
+    """
+    from repro.data import radixnet as rx
+    from repro.serve import run_challenge
+
+    spec = rx.RadixNetSpec(neurons, layers)
+    y0 = rx.radixnet_input_panel(
+        neurons, n_inputs, density=density, seed=seed
+    )
+    _, ref_cats = rx.radixnet_reference(spec, y0)
+    res = run_challenge(
+        spec,
+        n_inputs=n_inputs,
+        panel_width=panel_width,
+        batch_align=batch_align,
+        density=density,
+        seed=seed,
+    )
+    return {
+        "neurons": neurons,
+        "layers": layers,
+        "n_inputs": n_inputs,
+        "panel_width": panel_width,
+        "batch_align": batch_align,
+        "density": density,
+        "seed": seed,
+        "bias": spec.bias,
+        "fan_in": rx.FAN_IN,
+        "edges": spec.edges,
+        "routes": list(res.routes),
+        "levels": list(res.levels),
+        "width_classes": list(res.width_classes),
+        "engine_steps": res.steps,
+        "served": res.served,
+        "grid_steps": res.grid_steps,
+        "n_categories": int(len(res.categories)),
+        "reference_match": bool(
+            np.array_equal(res.categories, ref_cats)
+        ),
+        "wall_time_s": res.seconds,
+        "edge_inputs_per_sec": res.edge_inputs_per_sec,
+    }
+
+
 ALL_ARMS = (
-    "topologies", "fused", "train", "serve", "plan", "sharded", "faults"
+    "topologies", "fused", "train", "serve", "plan", "sharded", "faults",
+    "challenge",
 )
 
 
@@ -1019,6 +1092,39 @@ def run(quick: bool = False, arms=None):
         assert faults["train"]["losses_match_clean"], faults["train"]
         assert faults["train"]["skipped_steps"] == [3], faults["train"]
         payload["faults"] = faults
+
+    if "challenge" in arms:
+        # Challenge arm: fixed config in quick AND full runs (like
+        # serve) — sized past the VMEM budget so the tiled fused route
+        # is what gets measured.
+        challenge = challenge_arm(
+            neurons=16384,
+            layers=6,
+            n_inputs=48,
+            panel_width=24,
+            batch_align=8,
+            density=0.4,
+            seed=2,
+        )
+        print(
+            f"challenge: {challenge['neurons']}x{challenge['layers']} "
+            f"({challenge['edges']} edges, bias {challenge['bias']})  "
+            f"route {'/'.join(challenge['routes'])}  "
+            f"{challenge['n_categories']}/{challenge['n_inputs']} "
+            f"categories (reference match "
+            f"{challenge['reference_match']})  "
+            f"{challenge['edge_inputs_per_sec']:.3g} edge-inputs/s",
+            flush=True,
+        )
+        # challenge arm: the over-budget stack MUST take the tiled
+        # fused route end to end, and the engine's answer set must
+        # reproduce the numpy ground truth bit-for-bit
+        assert challenge["routes"] == ["fused-tiled"], challenge
+        assert challenge["levels"] == ["resident"], challenge
+        assert challenge["reference_match"], challenge
+        assert 0 < challenge["n_categories"] < challenge["n_inputs"]
+        assert challenge["served"] == challenge["n_inputs"]
+        payload["challenge"] = challenge
 
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

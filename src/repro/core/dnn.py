@@ -209,9 +209,11 @@ def dnn_forward_resident(
     """L-layer forward with the activation panel resident in VMEM.
 
     One ``pallas_call`` total (vs L for the layered path): eliminates
-    L−1 HBM activation round-trips. Falls back to ``dnn_forward(...,
-    fused=True)`` when the stack is ineligible (heterogeneous, dense,
-    CSR-layout, non-square, or panel too large for VMEM).
+    L−1 HBM activation round-trips. Stacks whose panel exceeds the VMEM
+    budget take the multi-panel tiled variant of the same single-call
+    kernel (HBM ping-pong panel, m tiled over the row-block grid); falls
+    back to ``dnn_forward(..., fused=True)`` when the stack is ineligible
+    for both (heterogeneous, dense, CSR-layout, or non-square).
 
     A plan-backed wrapper: with default knobs the stack's route, layout
     choices, and executable come from the shared
@@ -238,12 +240,19 @@ def dnn_forward_resident(
 
         plan = default_cache().get(weights, biases, max(y0.shape[1], 1))
         return plan.forward(y0)
-    if not resident_eligible(weights, block_n=block_n):
+    from repro.plan import routes as _plan_routes
+
+    route = _plan_routes.fused_route(weights, block_n=block_n)
+    if route is None:
         return dnn_forward(weights, biases, y0, fused=True)
     from repro.kernels import ops as kernel_ops
 
     stacked_w = stack_bsr(list(weights))
     stacked_b = jnp.stack(list(biases))
+    if route == _plan_routes.ROUTE_FUSED_TILED:
+        return kernel_ops.fused_mlp_tiled_forward(
+            stacked_w, stacked_b, y0, block_n=block_n, interpret=interpret
+        )
     return kernel_ops.fused_mlp_forward(
         stacked_w, stacked_b, y0, block_n=block_n, interpret=interpret
     )

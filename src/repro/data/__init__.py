@@ -1,1 +1,15 @@
 from repro.data.pipeline import SyntheticLM, Prefetcher  # noqa: F401
+from repro.data.radixnet import (  # noqa: F401
+    CHALLENGE_BIAS,
+    FAN_IN,
+    WEIGHT_VALUE,
+    RadixNetSpec,
+    challenge_bias,
+    conn_to_bsr,
+    radixnet_connectivity,
+    radixnet_input_panel,
+    radixnet_reference,
+    radixnet_weights,
+    reference_categories,
+    reference_forward,
+)

@@ -272,3 +272,33 @@ def _fused_bwd(cfg, res, g):
 
 
 fused_mlp_forward_nondiff.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_mlp_tiled_forward_nondiff(
+    cfg: FusedMlpConfig, stacked_w: BlockSparseMatrix, stacked_b: Array, y0: Array
+):
+    """The tiled fused kernel (HBM ping-pong panel) with the same
+    fails-loudly VJP story as the resident kernel: per-layer activations
+    only ever exist in the kernel's scratch buffers."""
+    return _fmlp.fused_mlp_tiled_forward(
+        stacked_w, stacked_b, y0, block_n=cfg.block_n, interpret=cfg.interpret
+    )
+
+
+def _fused_tiled_fwd(cfg, stacked_w, stacked_b, y0):
+    return fused_mlp_tiled_forward_nondiff(cfg, stacked_w, stacked_b, y0), None
+
+
+def _fused_tiled_bwd(cfg, res, g):
+    raise NotImplementedError(
+        "fused_mlp_tiled_forward has no VJP: per-layer activations only "
+        "exist in the kernel's HBM/VMEM scratch, so there is nothing to "
+        "checkpoint for the backward pass. Differentiate the layered "
+        "kernel path instead (repro.core.dnn.dnn_forward_trainable, or "
+        "serve.SparseDNNEngine(differentiable=True) which routes around "
+        "the fused paths automatically)."
+    )
+
+
+fused_mlp_tiled_forward_nondiff.defvjp(_fused_tiled_fwd, _fused_tiled_bwd)

@@ -67,6 +67,15 @@ def fused_mlp_eligible(w: BlockSparseMatrix, block_n: int = 128) -> bool:
     return m == k and fused_mlp_vmem_bytes(m, block_n) <= VMEM_SOFT_LIMIT_BYTES
 
 
+def fused_mlp_tiled_eligible(w: BlockSparseMatrix, block_n: int = 128) -> bool:
+    """Square stack of ANY height — the tiled variant keeps the panel in
+    HBM scratch and holds only per-block tiles in VMEM, so there is no
+    panel-size ceiling. (Dispatch still prefers the fully resident kernel
+    whenever :func:`fused_mlp_eligible` says the panel fits.)"""
+    m, k = w.shape
+    return m == k
+
+
 def _kernel(
     col_idx_ref,  # scalar-prefetch (L, nrb, mbpr) int32
     mask_ref,  # scalar-prefetch (L, nrb, mbpr) int32
@@ -185,3 +194,193 @@ def fused_mlp_forward(
         y0,
         stacked_b[:, :, None],
     )
+
+
+# --------------------------------------------------------------------------
+# Multi-panel tiled variant: m beyond the VMEM budget, panel in HBM
+# --------------------------------------------------------------------------
+
+
+def _tiled_kernel(
+    col_idx_ref,  # scalar-prefetch (L, nrb, mbpr) int32
+    mask_ref,  # scalar-prefetch (L, nrb, mbpr) int32
+    blocks_ref,  # (1, 1, mbpr, bs_r, bs_c) — row-block i's stored blocks
+    y0_ref,  # full (m, n) f32, HBM (never pulled into VMEM whole)
+    bias_ref,  # (1, bs_r, 1)
+    o_ref,  # full (m, n) f32, HBM
+    panel_ref,  # HBM scratch (2, m, bn) f32 ping-pong activation panel
+    ybuf_ref,  # VMEM scratch (2, bs_c, bn) f32 double-buffered gather
+    acc_ref,  # VMEM scratch (bs_r, bn) f32
+    vout_ref,  # VMEM scratch (bs_r, bn) f32 outgoing row-block stage
+    stage_sem,  # DMA semaphore: y0 stripe → panel[0]
+    gather_sems,  # DMA semaphores (2,): panel → ybuf slots
+    out_sem,  # DMA semaphore: vout → panel/output
+    *,
+    n_layers: int,
+    t_steps: int,
+    bs_r: int,
+    bs_c: int,
+    block_n: int,
+):
+    j = pl.program_id(0)
+    l = pl.program_id(1)
+    i = pl.program_id(2)
+    src = l % 2  # panel slot layer l reads; (l+1)%2 == 1-src is written
+
+    @pl.when((l == 0) & (i == 0))
+    def _stage_input_stripe():
+        # HBM→HBM: this j-stripe of y0 becomes layer 0's input panel.
+        cp = pltpu.make_async_copy(
+            y0_ref.at[:, pl.ds(j * block_n, block_n)],
+            panel_ref.at[0],
+            stage_sem,
+        )
+        cp.start()
+        cp.wait()
+
+    def gather(t, slot):
+        c = col_idx_ref[l, i, t]
+        return pltpu.make_async_copy(
+            panel_ref.at[src, pl.ds(c * bs_c, bs_c), :],
+            ybuf_ref.at[slot],
+            gather_sems.at[slot],
+        )
+
+    gather(0, 0).start()
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(t, carry):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < t_steps)
+        def _prefetch_next():
+            gather(t + 1, jax.lax.rem(t + 1, 2)).start()
+
+        gather(t, slot).wait()
+
+        @pl.when(mask_ref[l, i, t] != 0)
+        def _accumulate():
+            w = blocks_ref[0, 0, t].astype(jnp.float32)
+            acc_ref[...] += jnp.dot(
+                w, ybuf_ref[slot], preferred_element_type=jnp.float32
+            )
+
+        return carry
+
+    jax.lax.fori_loop(0, t_steps, body, 0)
+
+    # Same in-register epilogue as the resident kernel, then one DMA to
+    # the next layer's panel slot (waited: layer l+1 may read ANY block).
+    vout_ref[...] = jnp.maximum(
+        acc_ref[...] + bias_ref[0].astype(jnp.float32), 0.0
+    )
+    cp = pltpu.make_async_copy(
+        vout_ref,
+        panel_ref.at[1 - src, pl.ds(i * bs_r, bs_r), :],
+        out_sem,
+    )
+    cp.start()
+    cp.wait()
+
+    @pl.when(l == n_layers - 1)
+    def _store_output():
+        cp2 = pltpu.make_async_copy(
+            vout_ref,
+            o_ref.at[pl.ds(i * bs_r, bs_r), pl.ds(j * block_n, block_n)],
+            out_sem,
+        )
+        cp2.start()
+        cp2.wait()
+
+
+def fused_mlp_tiled_forward(
+    stacked_w: BlockSparseMatrix,
+    stacked_b: Array,
+    y0: Array,
+    *,
+    block_n: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> Array:
+    """Y[L] = relu-MLP(y0), ONE ``pallas_call``, panel tiled over m.
+
+    The resident kernel's (2, m, block_n) VMEM scratch caps m at
+    ``VMEM_SOFT_LIMIT_BYTES``; past it this variant keeps the ping-pong
+    activation panel in **HBM scratch** and tiles the m dimension over
+    the row-block grid: grid = (n_tiles, L, nrb) — each step DMAs the
+    row's ≤ ``max_blocks_per_row`` input blocks into a double-buffered
+    (bs_c, block_n) VMEM window (overlapping the gather of block t+1
+    with the MXU product of block t), closes the row with the fused
+    ``max(W·Y+b, 0)`` epilogue, and DMAs the (bs_r, block_n) result to
+    the next layer's panel slot. VMEM use is O(mbpr·bs² + bs·block_n) —
+    independent of m — while the stack still runs as a single kernel
+    with no per-layer XLA round-trips (the GraphChallenge 16k/64k-neuron
+    configs land here).
+
+    Same contract as :func:`fused_mlp_forward` otherwise: homogeneous
+    square ``stack_bsr`` stacks, ``n % block_n == 0``, forward-only.
+    """
+    m, k = stacked_w.shape
+    if m != k:
+        raise ValueError(f"fused MLP needs square layers, got {stacked_w.shape}")
+    if stacked_w.blocks.ndim != 5:
+        raise ValueError("stacked_w must carry a leading L axis (stack_bsr)")
+    n_layers, nrb, mbpr = stacked_w.col_idx.shape
+    bs_r, bs_c = stacked_w.block_shape
+    n = y0.shape[1]
+    assert y0.shape[0] == k, (stacked_w.shape, y0.shape)
+    assert n % block_n == 0, (n, block_n)
+    assert stacked_b.shape == (n_layers, m), stacked_b.shape
+    out_dtype = out_dtype or jnp.result_type(stacked_w.dtype, y0.dtype)
+
+    kernel = functools.partial(
+        _tiled_kernel,
+        n_layers=n_layers,
+        t_steps=mbpr,
+        bs_r=bs_r,
+        bs_c=bs_c,
+        block_n=block_n,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n // block_n, n_layers, nrb),
+        in_specs=[
+            # all stored blocks of (layer l, row-block i)
+            pl.BlockSpec(
+                (1, 1, mbpr, bs_r, bs_c),
+                lambda j, l, i, ci, mk: (l, i, 0, 0, 0),
+            ),
+            # the input panel stays in HBM; the kernel DMAs slices
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            # bias row-tile of layer l, row-block i
+            pl.BlockSpec((1, bs_r, 1), lambda j, l, i, ci, mk: (l, i, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.ANY((2, m, block_n), jnp.float32),
+            pltpu.VMEM((2, bs_c, block_n), jnp.float32),
+            pltpu.VMEM((bs_r, block_n), jnp.float32),
+            pltpu.VMEM((bs_r, block_n), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_compat.CompilerParams(
+            # The HBM panel scratch is shared across ALL grid steps —
+            # even the j stripes must run sequentially on one core.
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(
+        stacked_w.col_idx,
+        stacked_w.block_mask.astype(jnp.int32),
+        stacked_w.blocks,
+        y0.astype(jnp.float32),
+        stacked_b[:, :, None],
+    )
+    return out.astype(out_dtype)

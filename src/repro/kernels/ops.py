@@ -252,3 +252,29 @@ def fused_mlp_forward(
     cfg = _ad.FusedMlpConfig(block_n, interpret)
     out = _ad.fused_mlp_forward_nondiff(cfg, stacked_w, stacked_b, yp)
     return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_mlp_tiled_forward(
+    stacked_w: BlockSparseMatrix,
+    stacked_b: Array,
+    y0: Array,
+    *,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> Array:
+    """Padded, jit'd multi-panel tiled L-layer forward — ONE pallas_call.
+
+    The route for homogeneous square stacks whose activation panel
+    exceeds ``VMEM_SOFT_LIMIT_BYTES``: the ping-pong panel lives in HBM
+    scratch and the m dimension is tiled over the row-block grid
+    (``repro.kernels.fused_mlp.fused_mlp_tiled_forward``). Same
+    forward-only contract as ``fused_mlp_forward``.
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    n = y0.shape[1]
+    block_n = min(block_n, _ceil_mult(n))
+    yp = _pad_to(y0, 1, block_n)
+    cfg = _ad.FusedMlpConfig(block_n, interpret)
+    out = _ad.fused_mlp_tiled_forward_nondiff(cfg, stacked_w, stacked_b, yp)
+    return out[:, :n].astype(jnp.result_type(stacked_w.dtype, y0.dtype))

@@ -32,9 +32,11 @@ from repro.plan.layout import (  # noqa: F401
 )
 from repro.plan.routes import (  # noqa: F401
     ROUTE_FUSED,
+    ROUTE_FUSED_TILED,
     ROUTE_LAYERED,
     ROUTE_SHARDED,
     ROUTE_XLA,
+    fused_route,
     layer_path,
     resident_eligible,
 )
@@ -58,6 +60,7 @@ __all__ = [
     "ELL_WASTE_THRESHOLD",
     "DEFAULT_WIDTH_CLASSES",
     "ROUTE_FUSED",
+    "ROUTE_FUSED_TILED",
     "ROUTE_LAYERED",
     "ROUTE_SHARDED",
     "ROUTE_XLA",
@@ -75,6 +78,7 @@ __all__ = [
     "build_plan",
     "build_sharded_plan",
     "default_cache",
+    "fused_route",
     "layer_grid_steps",
     "layer_layout",
     "layer_path",

@@ -3,9 +3,15 @@
 One decision, made once per (topology, width-class, differentiable?)
 key at plan-build time and never re-derived per call:
 
-    resident-eligible AND not differentiable AND fused allowed?
-      └─ yes → **fused**: ONE VMEM-resident ``pallas_call`` for the
-               whole stack (``repro.kernels.fused_mlp``)
+    homogeneous square BSR stack AND not differentiable AND fused
+    allowed?
+      └─ panel fits VMEM → **fused**: ONE VMEM-resident ``pallas_call``
+               for the whole stack (``repro.kernels.fused_mlp``)
+      └─ panel past ``VMEM_SOFT_LIMIT_BYTES`` → **fused-tiled**: still
+               ONE ``pallas_call``, but the ping-pong activation panel
+               lives in HBM scratch and the m dimension is tiled over
+               the row-block grid
+               (``repro.kernels.fused_mlp.fused_mlp_tiled_forward``)
       └─ no  → per-layer dispatch, by execution layout:
                block-CSR → **kernel-bcsr** (occupancy-exact grid; the
                            differentiable backward reuses the plan's
@@ -29,6 +35,7 @@ from repro.plan.layout import Weight, layer_layout
 from repro.sparse.bsr import BlockSparseMatrix
 
 ROUTE_FUSED = "fused"
+ROUTE_FUSED_TILED = "fused-tiled"
 ROUTE_LAYERED = "layered"
 ROUTE_XLA = "xla"
 # Mesh-sharded layered route (repro.plan.sharded): per-shard block-CSR
@@ -37,33 +44,65 @@ ROUTE_XLA = "xla"
 ROUTE_SHARDED = "sharded"
 
 
-def resident_eligible(
-    weights: Sequence[Weight], *, block_n: int = 128
-) -> bool:
-    """Can this stack run through the single-call VMEM-resident kernel?
-
-    Requires: ≥1 layer, all layers BSR with identical square shape /
-    block shape / pad width, and the activation panel (at this
-    ``block_n``) within the VMEM budget. (BlockCSRMatrix stacks take the
-    layered path — per-layer ``total_blocks`` varies, so there is no
-    static stacked layout.)
-    """
-    from repro.kernels import fused_mlp as _fmlp
-
+def _homogeneous_bsr_stack(weights: Sequence[Weight]) -> bool:
+    """≥1 layer, all BSR with identical shape / block shape / pad width
+    — the structural precondition both fused kernels share.
+    (BlockCSRMatrix stacks take the layered path — per-layer
+    ``total_blocks`` varies, so there is no static stacked layout.)"""
     if not weights:
         return False
     first = weights[0]
     if not isinstance(first, BlockSparseMatrix):
         return False
-    if not all(
+    return all(
         isinstance(w, BlockSparseMatrix)
         and w.shape == first.shape
         and w.block_shape == first.block_shape
         and w.max_blocks_per_row == first.max_blocks_per_row
         for w in weights
-    ):
+    )
+
+
+def resident_eligible(
+    weights: Sequence[Weight], *, block_n: int = 128
+) -> bool:
+    """Can this stack run through the single-call VMEM-resident kernel?
+
+    Requires: a homogeneous square BSR stack whose activation panel (at
+    this ``block_n``) fits the VMEM budget. Stacks past the budget are
+    NOT resident-eligible but may still be ``fused-tiled``-eligible —
+    :func:`fused_route` makes the three-way call.
+    """
+    from repro.kernels import fused_mlp as _fmlp
+
+    if not _homogeneous_bsr_stack(weights):
         return False
-    return _fmlp.fused_mlp_eligible(first, block_n)
+    return _fmlp.fused_mlp_eligible(weights[0], block_n)
+
+
+def fused_route(
+    weights: Sequence[Weight], *, block_n: int = 128
+) -> str | None:
+    """Which single-``pallas_call`` fused route (if any) fits this stack.
+
+    ``ROUTE_FUSED`` when the activation panel fits VMEM
+    (:func:`resident_eligible`), ``ROUTE_FUSED_TILED`` for a homogeneous
+    square BSR stack past ``VMEM_SOFT_LIMIT_BYTES`` (panel ping-pongs
+    through HBM scratch, m tiled over the row-block grid), ``None`` when
+    only the per-layer routes apply. The boundary is exact:
+    ``fused_mlp_vmem_bytes(m, block_n) == VMEM_SOFT_LIMIT_BYTES`` is the
+    last resident m; one block-row more tips into fused-tiled.
+    """
+    from repro.kernels import fused_mlp as _fmlp
+
+    if not _homogeneous_bsr_stack(weights):
+        return None
+    first = weights[0]
+    if not _fmlp.fused_mlp_tiled_eligible(first, block_n):  # square check
+        return None
+    if _fmlp.fused_mlp_eligible(first, block_n):
+        return ROUTE_FUSED
+    return ROUTE_FUSED_TILED
 
 
 def layer_path(w: Weight, *, differentiable: bool) -> str:

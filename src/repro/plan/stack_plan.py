@@ -112,7 +112,7 @@ class LayerPlan:
     index: int
     source_layout: str  # layout of the caller's weight ("dense"/"ell"/"bcsr")
     layout: str  # execution layout after the waste heuristic
-    path: str  # routes.layer_path value, or "fused"
+    path: str  # routes.layer_path value, or "fused"/"fused-tiled"
     grid_steps: int  # exact bill at the plan's width
     transpose_plan: BcsrTransposePlan | None  # cached backward transpose
 
@@ -130,7 +130,7 @@ class StackPlan:
     """
 
     key: PlanKey
-    route: str  # routes.ROUTE_FUSED / ROUTE_LAYERED / ROUTE_XLA
+    route: str  # routes.ROUTE_FUSED / ROUTE_FUSED_TILED / ROUTE_LAYERED / ROUTE_XLA
     layers: tuple[LayerPlan, ...]
     width: int
     differentiable: bool
@@ -149,9 +149,17 @@ class StackPlan:
         return len(self.layers)
 
     @property
+    def is_fused_route(self) -> bool:
+        """Single-``pallas_call`` whole-stack route (resident or tiled)."""
+        return self.route in (
+            _routes.ROUTE_FUSED,
+            _routes.ROUTE_FUSED_TILED,
+        )
+
+    @property
     def pallas_calls(self) -> int:
         """Kernel launches one forward of this plan performs."""
-        if self.route == _routes.ROUTE_FUSED:
+        if self.is_fused_route:
             return 1
         return sum(1 for lp in self.layers if lp.path != "xla-dense")
 
@@ -203,7 +211,7 @@ class StackPlan:
         if k < self.width:
             y0 = jnp.pad(y0, ((0, 0), (0, self.width - k)))
         self.calls += 1
-        if self.route == _routes.ROUTE_FUSED:
+        if self.is_fused_route:
             out = self._fn(self._stacked[0], self._stacked[1], y0)
         else:
             out = self._fn(self.weights, self.biases, y0)
@@ -256,6 +264,14 @@ def _make_executable(plan: StackPlan) -> Callable:
             return kernel_ops.fused_mlp_forward(stacked_w, stacked_b, y)
 
         return jax.jit(run_fused)
+
+    if plan.route == _routes.ROUTE_FUSED_TILED:
+
+        def run_fused_tiled(stacked_w, stacked_b, y):
+            plan._compiles += 1
+            return kernel_ops.fused_mlp_tiled_forward(stacked_w, stacked_b, y)
+
+        return jax.jit(run_fused_tiled)
 
     paths = tuple(lp.path for lp in plan.layers)
     tps = plan.transpose_plans
@@ -314,22 +330,26 @@ def build_plan(
     if fingerprint is None:
         fingerprint = topology_fingerprint(weights)
 
-    resident_ok = (
-        not differentiable and _routes.resident_eligible(weights)
+    # fused_ok: which single-pallas_call route structurally fits —
+    # ROUTE_FUSED (panel resident in VMEM), ROUTE_FUSED_TILED (panel
+    # past the VMEM budget, ping-ponged through HBM scratch), or None.
+    fused_ok = (
+        None if differentiable else _routes.fused_route(weights)
     )
-    if use_resident and not resident_ok:
+    if use_resident and fused_ok is None:
         raise ValueError(
             "use_resident=True but the stack is not eligible for the "
-            "VMEM-resident kernel"
+            "fused whole-stack kernels"
             + (
-                " (differentiable plans route around its missing VJP)"
+                " (differentiable plans route around their missing VJP)"
                 if differentiable
-                else " (needs a homogeneous square BSR stack whose "
-                "activation panel fits VMEM)"
+                else " (needs a homogeneous square BSR stack)"
             )
         )
-    fused = resident_ok if use_resident is None else bool(use_resident)
-    route = _routes.ROUTE_FUSED if fused else _routes.ROUTE_LAYERED
+    if use_resident is None or use_resident:
+        route = fused_ok or _routes.ROUTE_LAYERED
+    else:
+        route = _routes.ROUTE_LAYERED
 
     if relayout is None:
         relayout = not differentiable
@@ -359,17 +379,21 @@ def build_plan(
             for lp, ew in zip(donor.layers, exec_weights)
         ]
     else:
+        fused_family = route in (
+            _routes.ROUTE_FUSED,
+            _routes.ROUTE_FUSED_TILED,
+        )
         exec_weights = []
         layer_plans = []
         for i, w in enumerate(weights):
             src_layout = _layout.layer_layout(w)
             ew = w
-            if route != _routes.ROUTE_FUSED and relayout:
+            if not fused_family and relayout:
                 ew = _layout.to_preferred_layout(w)
             exec_layout = _layout.layer_layout(ew)
             path = (
-                "fused"
-                if route == _routes.ROUTE_FUSED
+                route
+                if fused_family
                 else _routes.layer_path(ew, differentiable=differentiable)
             )
             tp = None
@@ -406,7 +430,7 @@ def build_plan(
         source_weights=weights,
         source_biases=biases,
     )
-    if route == _routes.ROUTE_FUSED:
+    if plan.is_fused_route:
         if donor is not None:
             plan._stacked = donor._stacked  # one device copy per topology
         else:

@@ -1,3 +1,7 @@
+from repro.serve.challenge import (  # noqa: F401
+    ChallengeResult,
+    run_challenge,
+)
 from repro.serve.engine import (  # noqa: F401
     Engine,
     SparseDNNEngine,

@@ -185,17 +185,21 @@ class SparseDNNEngine:
                 "VMEM; sharded serving always takes the per-shard "
                 "layered route. Pass use_resident=None/False."
             )
+        from repro.plan import routes as _routes
+
+        # Fused-family eligibility covers both the VMEM-resident kernel
+        # and the multi-panel tiled variant (panel past the VMEM budget)
+        # — either way the plan layer serves ONE pallas_call per step.
         resident_ok = (
             not self.differentiable
             and self.mesh is None
-            and dnn.resident_eligible(self.weights)
+            and _routes.fused_route(self.weights) is not None
         )
         if self.use_resident and not resident_ok:
             raise ValueError(
                 "use_resident=True but the stack is not eligible for the "
-                "VMEM-resident kernel (needs a homogeneous square BSR "
-                "stack whose activation panel fits VMEM); pass "
-                "use_resident=None to auto-detect"
+                "fused whole-stack kernels (needs a homogeneous square "
+                "BSR stack); pass use_resident=None to auto-detect"
             )
         self._resident = (
             resident_ok if self.use_resident is None else self.use_resident

@@ -12,9 +12,12 @@ jax.config.update("jax_default_matmul_precision", "highest")
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
-        "slow: long-running tests (multi-device subprocess runs); the "
-        "CI multi-device job deselects them because it runs the same "
-        "checks in-process on its 8-device view",
+        "slow: long-running tests — GraphChallenge-scale conformance "
+        "configs (interpret-mode kernels on 120-layer / 16384-neuron "
+        "stacks) and multi-device subprocess runs. Tier-1 CI deselects "
+        "them (-m 'not slow') and a dedicated slow job runs them; the "
+        "multi-device job also deselects them because it runs the same "
+        "sharded checks in-process on its 8-device view",
     )
 
 # Property tests prefer real hypothesis (requirements-dev.txt); in

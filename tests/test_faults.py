@@ -212,6 +212,51 @@ def test_compile_failure_demotes_resident_to_layered():
     assert s3["plan"]["degraded"] is False
 
 
+def test_restore_reverses_demotion_and_logs_up_transition():
+    """Restore semantics: after ``restore()`` the next panel re-plans at
+    the restored level, the event history records the up-transition
+    (healthy=True) with the operator's reason/step, and restoring an
+    already-healthy level is a silent no-op."""
+    m = 32
+    ws, bs = _bsr_stack(9, 2, m)
+    inj = FaultInjector()
+    inj.schedule(SITE_PLAN_COMPILE, 0)
+    eng = SparseDNNEngine(ws, bs, batch_align=8, fault_injector=inj)
+    _, s0 = eng.infer(_panel(20, m, 4))
+    assert s0["plan"]["level"] == LEVEL_LAYERED  # demoted by the fault
+
+    eng.ladder.restore(LEVEL_RESIDENT, reason="node re-slotted", step=7)
+    # the history records the full round trip: down, then up
+    assert [(e.level, e.healthy) for e in eng.ladder.events] == [
+        (LEVEL_RESIDENT, False),
+        (LEVEL_RESIDENT, True),
+    ]
+    up = eng.ladder.events[-1]
+    assert up.reason == "node re-slotted" and up.step == 7
+    assert eng.ladder.is_healthy(LEVEL_RESIDENT)
+    assert not eng.ladder.degraded
+    # idempotent: restoring a healthy level appends NO duplicate event
+    eng.ladder.restore(LEVEL_RESIDENT)
+    assert len(eng.ladder.events) == 2
+    # the floor has no health state to restore
+    with pytest.raises(ValueError, match="health"):
+        eng.ladder.restore(LEVEL_LAYERED)
+
+    # the next panel re-plans at the restored level — and still matches
+    # a never-degraded engine bit for bit
+    clean = SparseDNNEngine(ws, bs, batch_align=8)
+    p = _panel(21, m, 4)
+    out, s1 = eng.infer(p)
+    ref, _ = clean.infer(p)
+    assert s1["plan"]["level"] == LEVEL_RESIDENT
+    assert s1["plan"]["degraded"] is False
+    assert np.array_equal(out, ref)
+    # the serve-stats surface sees the same round trip
+    d = eng.ladder.describe()
+    assert d["current"] == d["preferred"] == LEVEL_RESIDENT
+    assert [e["healthy"] for e in d["events"]] == [False, True]
+
+
 def test_shard_failure_degrades_to_single_device_same_results():
     from repro.launch.mesh import make_row_blocks_mesh
 

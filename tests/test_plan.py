@@ -215,6 +215,49 @@ def test_plan_forward_pads_to_width_class_and_rejects_overflow():
         plan.forward(jnp.zeros((32, 17)))
 
 
+def test_vmem_boundary_tips_fused_into_tiled_exactly():
+    """Regression for the route boundary: the last m whose activation
+    panel exactly fills ``VMEM_SOFT_LIMIT_BYTES`` still takes the
+    resident fused route; ONE block-row more must tip into fused-tiled
+    (never layered). Asserted through the plan layer's decision tree,
+    not the kernel."""
+    from repro.kernels.fused_mlp import (
+        VMEM_SOFT_LIMIT_BYTES,
+        fused_mlp_vmem_bytes,
+    )
+
+    block = 16
+    bytes_per_row = fused_mlp_vmem_bytes(1)
+    m_res = VMEM_SOFT_LIMIT_BYTES // bytes_per_row  # last resident m
+    assert fused_mlp_vmem_bytes(m_res) == VMEM_SOFT_LIMIT_BYTES
+    assert m_res % block == 0
+
+    at, bs_at = _stack(jax.random.PRNGKey(40), 2, m_res, block=block)
+    over, bs_over = _stack(
+        jax.random.PRNGKey(41), 2, m_res + block, block=block
+    )
+    # the three-way route call is exact at the boundary
+    assert P.fused_route(at) == P.ROUTE_FUSED
+    assert P.fused_route(over) == P.ROUTE_FUSED_TILED
+    # ...and build_plan agrees: both stay single-pallas_call plans
+    plan_at = P.build_plan(at, bs_at, 8)
+    plan_over = P.build_plan(over, bs_over, 8)
+    assert plan_at.route == P.ROUTE_FUSED
+    assert plan_over.route == P.ROUTE_FUSED_TILED
+    assert plan_over.route != P.ROUTE_LAYERED
+    assert plan_at.pallas_calls == plan_over.pallas_calls == 1
+    # the over-budget stack still honours the engine's resident knob
+    # (fused family), and use_resident=False forces layered as usual
+    assert (
+        P.build_plan(over, bs_over, 8, use_resident=True).route
+        == P.ROUTE_FUSED_TILED
+    )
+    assert (
+        P.build_plan(over, bs_over, 8, use_resident=False).route
+        == P.ROUTE_LAYERED
+    )
+
+
 def test_use_resident_tristate_matches_engine_contract():
     ws, bs = _stack(jax.random.PRNGKey(17), 2, 64)
     assert P.build_plan(ws, bs, 8, use_resident=True).route == P.ROUTE_FUSED

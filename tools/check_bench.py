@@ -80,6 +80,15 @@ PARAMS = {
         "tile_align",
         "seed",
     ),
+    "challenge": (
+        "neurons",
+        "layers",
+        "n_inputs",
+        "panel_width",
+        "batch_align",
+        "density",
+        "seed",
+    ),
 }
 
 EXACT = {
@@ -171,6 +180,23 @@ FAULTS_TRAIN_EXACT = (
     "restarts",
     "losses_match_clean",
     "loss_decreased",
+)
+# Challenge arm (GraphChallenge workload): the topology, routing, and
+# the answer set are all deterministic given the generator params —
+# checked exactly; the official edges×inputs/sec rate rides on
+# wall-clock and is only gated against blowups.
+CHALLENGE_EXACT = (
+    "bias",
+    "fan_in",
+    "edges",
+    "routes",
+    "levels",
+    "width_classes",
+    "engine_steps",
+    "served",
+    "grid_steps",
+    "n_categories",
+    "reference_match",
 )
 # Deterministic serve accounting, checked exactly for BOTH arms.
 SERVE_EXACT = (
@@ -436,6 +462,32 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
         wt_f = fs.get("serve", {}).get("wall_time_s")
         if wt_b is not None and wt_f is not None:
             gate.time("faults", "serve.wall_time_s", wt_b, wt_f)
+
+    # --- challenge: conformance exact, official rate gated tolerantly -
+    pair = _section_pair(gate, "challenge", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for field in CHALLENGE_EXACT:
+            if field not in bs:
+                gate.skip("challenge", f"{field} absent from baseline")
+                continue
+            if field not in fs:
+                gate.missing("challenge", field)
+                continue
+            gate.exact("challenge", field, bs[field], fs[field])
+        # headline invariant, gated regardless of baseline drift: the
+        # streamed engine answer set must match the numpy ground truth
+        match = fs.get("reference_match", False)
+        gate._add(
+            "challenge",
+            "reference_match",
+            True,
+            match,
+            "ok" if match else "FAIL",
+        )
+        wt_b, wt_f = bs.get("wall_time_s"), fs.get("wall_time_s")
+        if wt_b is not None and wt_f is not None:
+            gate.time("challenge", "wall_time_s", wt_b, wt_f)
 
     # --- serve: deterministic accounting exact, pad waste gated -------
     pair = _section_pair(gate, "serve", baseline, fresh)
