@@ -24,7 +24,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import sparse as jsparse
 
 from benchmarks.common import (

@@ -61,6 +61,19 @@ track the trajectory:
           official edges × inputs / sec metric plus a bit-level
           conformance check against the numpy ground-truth categories
           (tests/test_challenge.py is the full suite).
+  fleet:  the FLEET arm — the async serving front-end
+          (``repro.serve.frontend``) driving 1-replica vs N-replica
+          fleets over the SAME bursty open-loop trace
+          (``repro.serve.loadgen``) at a sweep of offered rates, all on
+          a virtual clock with a deterministic grid-step service model:
+          throughput-vs-p99 curves, deadline-miss rates, and the
+          width-class-affinity router's fleet-wide plan-cache hit rate
+          (≥ 0.9 asserted). The headline: the fleet sustains a strictly
+          higher offered load than one engine at the same miss budget.
+          Every curve number is a pure function of the config — gated
+          exactly; also written standalone to
+          ``BENCH_fleet_curves.json`` for the CI latency-curve
+          artifact.
 
 ``--arms`` selects a comma-separated subset (e.g. ``--arms serve`` or
 ``--arms topologies,sharded``) so CI and local runs can execute a
@@ -92,6 +105,7 @@ from repro.sparse import ops as sparse_ops
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+FLEET_CURVES_PATH = os.path.join(REPO_ROOT, "BENCH_fleet_curves.json")
 
 
 def _grid_steps_ell(a: BlockSparseMatrix, n: int, block_n: int = 128) -> int:
@@ -852,9 +866,159 @@ def challenge_arm(
     }
 
 
+def fleet_arm(
+    m: int,
+    L: int,
+    bpr: int,
+    duration_s: float,
+    seed: int,
+    replicas: int,
+    rate_factors,
+    miss_budget: float,
+):
+    """The FLEET arm — replicated serving under open-loop load.
+
+    The same bursty trace shape (``LoadProfile.bursty``, Lewis–Shedler
+    thinned Poisson arrivals, two panel width classes) is swept across
+    ``rate_factors`` and served twice per rate: by a 1-replica fleet and
+    by an N-replica fleet, both through the event-loop front-end on a
+    :class:`VirtualClock` with a deterministic grid-step service model.
+    Engine compute really runs (outputs are real); latency is the
+    model's, so every curve point — p50/p99, deadline-miss rate,
+    throughput, plan-cache hit rate — is a pure function of this
+    config, bit-identical on any runner, and the CI gate compares it
+    exactly.
+
+    Headline metric: **sustained offered load** = the highest swept rate
+    whose miss rate (deadline misses + admission rejections, over
+    everything offered) stays within ``miss_budget``. The fleet must
+    sustain strictly more than the single engine, and the width-class
+    affinity router must keep the fleet-wide plan-cache hit rate ≥ 0.9
+    (routing by load alone would recompile classes all over the fleet).
+    """
+    import time
+
+    from repro.serve import (
+        FleetFrontend,
+        LoadProfile,
+        ReplicaFleet,
+        ServiceModel,
+        SparseDNNEngine,
+        VirtualClock,
+        generate_jobs,
+    )
+
+    ws = [
+        BlockSparseMatrix.random(
+            jax.random.PRNGKey(900 + i), (m, m), (16, 16), blocks_per_row=bpr
+        )
+        for i in range(L)
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+    profile = {
+        "kind": "bursty",
+        "base": 10.0,
+        "burst_rate": 40.0,
+        "burst_every": 2.0,
+        "burst_len": 0.5,
+    }
+    width_classes = (8, 24)
+    width_mix = ((4, 0.7), (24, 0.3))
+    deadline_s = 0.05
+    service = {"base_s": 2e-3, "per_grid_step_s": 1e-4}
+    max_pending_cols = 2048
+    base_profile = LoadProfile.bursty(
+        profile["base"],
+        profile["burst_rate"],
+        profile["burst_every"],
+        profile["burst_len"],
+    )
+
+    def run_point(n_replicas: int, factor: float) -> dict:
+        jobs = generate_jobs(
+            base_profile.scaled(factor),
+            duration_s,
+            m=m,
+            seed=seed,
+            width_mix=width_mix,
+            deadline_s=deadline_s,
+        )
+        engines = [
+            SparseDNNEngine(ws, bs, batch_align=8) for _ in range(n_replicas)
+        ]
+        fleet = ReplicaFleet(engines, width_classes=width_classes)
+        fe = FleetFrontend(
+            fleet,
+            clock=VirtualClock(),
+            service_model=ServiceModel(**service),
+            max_pending_cols=max_pending_cols,
+        )
+        st = fe.run(jobs)
+        f = st["fleet"]
+        return {
+            "replicas": n_replicas,
+            "rate_factor": factor,
+            "offered_jobs": st["offered_jobs"],
+            "offered_jobs_per_s": st["offered_jobs"] / duration_s,
+            "served_jobs": st["served_jobs"],
+            "failed_jobs": st["failed_jobs"],
+            "rejected_jobs": st["rejected_jobs"],
+            "deadline_misses": st["deadline_misses"],
+            "miss_rate": st["miss_rate"],
+            "latency_p50_s": st["latency_p50_s"],
+            "latency_p99_s": st["latency_p99_s"],
+            "latency_max_s": st["latency_max_s"],
+            "throughput_cols_per_s": st["throughput_cols_per_s"],
+            "goodput_cols_per_s": st["goodput_cols_per_s"],
+            "plan_hit_rate": f["plan_hit_rate"],
+            "cross_replica_compiles": f["cross_replica_compiles"],
+            "routing": f["routing"],
+        }
+
+    t0 = time.perf_counter()
+    curves = {
+        "single": [run_point(1, f) for f in rate_factors],
+        "fleet": [run_point(replicas, f) for f in rate_factors],
+    }
+
+    def sustained(points) -> float:
+        ok = [
+            p["offered_jobs_per_s"]
+            for p in points
+            if p["miss_rate"] <= miss_budget
+        ]
+        return max(ok, default=0.0)
+
+    return {
+        "m": m,
+        "layers": L,
+        "blocks_per_row": bpr,
+        "duration_s": duration_s,
+        "seed": seed,
+        "replicas": replicas,
+        "rate_factors": list(rate_factors),
+        "miss_budget": miss_budget,
+        "profile": profile,
+        "width_classes": list(width_classes),
+        "width_mix": [list(p) for p in width_mix],
+        "deadline_s": deadline_s,
+        "service_model": service,
+        "max_pending_cols": max_pending_cols,
+        "curves": curves,
+        "sustained_jobs_per_s": {
+            "single": sustained(curves["single"]),
+            "fleet": sustained(curves["fleet"]),
+        },
+        "fleet_plan_hit_rate_min": min(
+            p["plan_hit_rate"] for p in curves["fleet"]
+        ),
+        "wall_time_s": time.perf_counter() - t0,
+    }
+
+
 ALL_ARMS = (
     "topologies", "fused", "train", "serve", "plan", "sharded", "faults",
-    "challenge",
+    "challenge", "fleet",
 )
 
 
@@ -1125,6 +1289,60 @@ def run(quick: bool = False, arms=None):
         assert 0 < challenge["n_categories"] < challenge["n_inputs"]
         assert challenge["served"] == challenge["n_inputs"]
         payload["challenge"] = challenge
+
+    if "fleet" in arms:
+        # Fleet arm: identical config in quick and full runs (virtual
+        # clock — the sweep costs engine compute, not waiting).
+        fleet = fleet_arm(
+            m=64,
+            L=3,
+            bpr=2,
+            duration_s=8.0,
+            seed=17,
+            replicas=3,
+            rate_factors=(2.0, 4.0, 6.0, 8.0),
+            miss_budget=0.01,
+        )
+        sus = fleet["sustained_jobs_per_s"]
+        print(
+            f"fleet: sustained {sus['single']:.1f} jobs/s x1 → "
+            f"{sus['fleet']:.1f} jobs/s x{fleet['replicas']} "
+            f"(miss budget {fleet['miss_budget']})  "
+            f"hit rate ≥ {fleet['fleet_plan_hit_rate_min']:.3f}  "
+            f"p99 at top rate "
+            f"{fleet['curves']['single'][-1]['latency_p99_s']*1e3:.1f}ms"
+            f"→{fleet['curves']['fleet'][-1]['latency_p99_s']*1e3:.1f}ms",
+            flush=True,
+        )
+        # fleet arm headline: N replicas behind the affinity router
+        # sustain STRICTLY more offered load than one engine at the
+        # same miss budget; the router keeps fleet-wide plan-cache hit
+        # rate at single-engine levels; and nothing is ever dropped —
+        # every offered job is served, failed-gracefully, or visibly
+        # rejected at admission.
+        assert sus["fleet"] > sus["single"], fleet["sustained_jobs_per_s"]
+        assert fleet["fleet_plan_hit_rate_min"] >= 0.9, fleet
+        for arm_name, points in fleet["curves"].items():
+            for p in points:
+                assert (
+                    p["served_jobs"] + p["failed_jobs"] + p["rejected_jobs"]
+                    == p["offered_jobs"]
+                ), (arm_name, p)
+                assert p["failed_jobs"] == 0, (arm_name, p)
+        payload["fleet"] = fleet
+        # Standalone latency-curve artifact for the CI bench job upload.
+        with open(FLEET_CURVES_PATH, "w") as f:
+            json.dump(
+                {
+                    "curves": fleet["curves"],
+                    "sustained_jobs_per_s": fleet["sustained_jobs_per_s"],
+                    "miss_budget": fleet["miss_budget"],
+                    "replicas": fleet["replicas"],
+                },
+                f,
+                indent=1,
+            )
+        print(f"wrote {FLEET_CURVES_PATH}")
 
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

@@ -14,7 +14,6 @@ blocks while the dense arm pays the full m².
 """
 
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ layer 0), a repeating ``period`` pattern (scanned), and a ``tail``
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

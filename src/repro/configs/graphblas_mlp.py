@@ -5,8 +5,6 @@ grid of Fig. 5 (m ∈ {512, 2048, 8192, 32768}; inverse sparsity 1 →
 262144). The DNN is evaluated through ``repro.core.dnn`` over the
 (S1, S2) semiring pair."""
 
-import dataclasses
-
 from repro.configs.base import LayerSpec, ModelConfig, SparsityConfig
 
 

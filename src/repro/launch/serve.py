@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.model import Model
-from repro.serve.engine import Engine, cache_nbytes
+from repro.serve.engine import Engine
 
 
 def main():

@@ -67,7 +67,7 @@ def main():
         print(f"{n_params/1e6:.1f}M")
         state_ps = param_pspecs(cfg, state, mesh, rules)
         state = jax.device_put(state, shardings_for(None, mesh, state_ps))
-        batch_ps = batch_pspecs(mesh, rules)["inputs"]
+        _batch_ps = batch_pspecs(mesh, rules)["inputs"]
         step_fn = jax.jit(
             make_train_step(model, opt, microbatches=args.microbatches),
             in_shardings=(

@@ -102,7 +102,6 @@ def apply_moe(
     tokens = b * s0
     s = _group_size(tokens)
     x = x.reshape(tokens // s, s, d)
-    g = tokens // s
     e = cfg.num_experts
     capacity = max(
         1, -(-int(cfg.capacity_factor * s * cfg.top_k) // e)

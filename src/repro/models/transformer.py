@@ -21,7 +21,6 @@ sequence lives in ``repro.core.dnn``).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -34,7 +33,6 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
 from repro.models.layers import (
-    activation,
     apply_ffn,
     dense_init,
     init_ffn,

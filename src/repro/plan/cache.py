@@ -154,6 +154,20 @@ class PlanCache:
             self.evictions += 1
         return plan
 
+    def compiled_widths(self, fingerprint: str) -> set[int]:
+        """Width classes this cache already holds a plan for, for one
+        topology fingerprint. The fleet router's affinity signal
+        (``repro.serve.fleet``): a replica whose cache lists a request's
+        width class serves it without a fresh compile, so routing by
+        this set keeps the fleet-wide hit rate at single-engine levels.
+        Cheap (walks the ≤ max_size entries; no building, no LRU
+        touch)."""
+        return {
+            key.width
+            for key in self._entries
+            if key.fingerprint == fingerprint
+        }
+
     def clear(self) -> None:
         self._entries.clear()
 

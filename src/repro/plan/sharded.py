@@ -38,7 +38,7 @@ above it), ``train.make_sparse_train_step(plan=sharded_plan)``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -2,10 +2,31 @@ from repro.serve.challenge import (  # noqa: F401
     ChallengeResult,
     run_challenge,
 )
+from repro.serve.clock import (  # noqa: F401
+    WALL_CLOCK,
+    Clock,
+    VirtualClock,
+    WallClock,
+)
 from repro.serve.engine import (  # noqa: F401
     Engine,
     SparseDNNEngine,
     cache_nbytes,
+)
+from repro.serve.fleet import (  # noqa: F401
+    Replica,
+    ReplicaFleet,
+    RoutingDecision,
+)
+from repro.serve.frontend import (  # noqa: F401
+    CompletedJob,
+    FleetFrontend,
+    ServiceModel,
+)
+from repro.serve.loadgen import (  # noqa: F401
+    ArrivalJob,
+    LoadProfile,
+    generate_jobs,
 )
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousBatcher,

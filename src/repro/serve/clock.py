@@ -1,0 +1,93 @@
+"""Injectable clocks for the serving stack.
+
+Every latency number the serving layer reports — arrival timestamps,
+deadlines, retry backoff, straggler stalls, the front-end's event loop —
+flows through a :class:`Clock` so the SAME code path runs in two modes:
+
+* :class:`WallClock` — production: ``time.monotonic`` timestamps and
+  real ``time.sleep`` waits;
+* :class:`VirtualClock` — tests, benchmarks, CI: time is a number the
+  event loop advances. ``sleep`` moves the clock forward instantly and
+  records the request, so a whole bursty serving trace with deadlines,
+  backoff and straggler stalls runs in milliseconds of real time and is
+  bit-identical run to run — including on a loaded CI runner.
+
+Nothing in ``repro.serve`` may call ``time.time``/``time.monotonic``/
+``time.sleep`` directly for latency accounting; the CI ``fleet`` job
+runs the serving tests with a guard that fails on any real sleep.
+(``time.perf_counter`` spans around whole benchmark arms measure *real*
+elapsed wall-clock of the run itself and are gated only tolerantly —
+those are measurements of the host, not of request latency.)
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Clock(Protocol):
+    """What the serving stack needs from a time source."""
+
+    def now(self) -> float:
+        """Current time in seconds (monotonic; epoch is arbitrary)."""
+        ...
+
+    def sleep(self, seconds: float) -> None:
+        """Block (or advance virtual time) for ``seconds``."""
+        ...
+
+
+class WallClock:
+    """Real time: ``time.monotonic`` + ``time.sleep``."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+
+class VirtualClock:
+    """Deterministic simulated time.
+
+    ``now()`` returns the simulated timestamp; ``sleep(dt)`` advances it
+    by ``dt`` instantly and logs the request in :attr:`sleeps` (tests
+    assert on it — e.g. that retry backoff *would* have waited without
+    actually stalling CI). ``advance_to(t)`` is the event-loop primitive:
+    jump to an absolute timestamp, never backwards.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self.sleeps: list[float] = []
+
+    def now(self) -> float:
+        return self._now
+
+    def sleep(self, seconds: float) -> None:
+        if seconds < 0:
+            raise ValueError(f"cannot sleep {seconds} s")
+        self.sleeps.append(float(seconds))
+        self._now += float(seconds)
+
+    def advance_to(self, t: float) -> None:
+        if t < self._now:
+            raise ValueError(
+                f"cannot move a monotonic clock backwards: {t} < {self._now}"
+            )
+        self._now = float(t)
+
+    @property
+    def slept_total(self) -> float:
+        return sum(self.sleeps)
+
+
+# Module-level default used when callers don't inject one. A singleton,
+# so `clock or WALL_CLOCK` never allocates on the hot path.
+WALL_CLOCK = WallClock()
+
+
+__all__ = ["Clock", "WallClock", "VirtualClock", "WALL_CLOCK"]

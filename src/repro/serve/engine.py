@@ -43,7 +43,6 @@ every panel (``ContinuousBatcher(width_classes=...)``).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Sequence
 
 import jax
@@ -53,6 +52,7 @@ import numpy as np
 from repro.core import dnn
 from repro.models.model import Model
 from repro.plan import DegradationLadder, PlanCache, topology_fingerprint
+from repro.serve.clock import WALL_CLOCK
 from repro.testing import faults as _faults
 
 Array = jax.Array
@@ -166,6 +166,11 @@ class SparseDNNEngine:
     # in-bounds indices, finite values — see BlockCSRMatrix.validate).
     # Trust boundary only; the per-step hot path never re-checks.
     validate: bool = True
+    # Time source for retry backoff (repro.serve.clock): None = real
+    # wall clock. Tests and the bench inject a VirtualClock so a
+    # backoff-heavy faulted trace neither stalls CI nor depends on
+    # runner load.
+    clock: Any = None
 
     def __post_init__(self):
         self.n_layers = len(self.weights)
@@ -409,7 +414,9 @@ class SparseDNNEngine:
                     break
                 retries += 1
                 if self.retry_backoff_s:
-                    time.sleep(self.retry_backoff_s * 2**attempt)
+                    (self.clock or WALL_CLOCK).sleep(
+                        self.retry_backoff_s * 2**attempt
+                    )
             except Exception as e:  # noqa: BLE001 — not retryable
                 last_err = e
                 break

@@ -47,6 +47,7 @@ from typing import Iterable, Sequence
 import jax
 import numpy as np
 
+from repro.serve.clock import WALL_CLOCK
 from repro.serve.engine import SparseDNNEngine
 from repro.testing import faults as _faults
 
@@ -445,6 +446,7 @@ class ContinuousBatcher:
         max_pending: int | None = None,
         enforce_deadlines: bool = True,
         fault_injector=None,
+        clock=None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -469,6 +471,10 @@ class ContinuousBatcher:
         self.width_classes = width_classes
         self.enforce_deadlines = enforce_deadlines
         self.fault_injector = fault_injector
+        # Straggler stalls (and any future wall-clock wait) go through
+        # the injectable clock (repro.serve.clock) so tests can run
+        # faulted traces without real sleeps.
+        self.clock = clock if clock is not None else WALL_CLOCK
         self.queue = RequestQueue(age_every=age_every, max_pending=max_pending)
         self._tick = 0
         self._idle_ticks = 0
@@ -549,7 +555,7 @@ class ContinuousBatcher:
             spec = inj.fires(_faults.SITE_STRAGGLER, self._tick)
             if spec is not None:
                 self._faults.straggler_ticks += 1
-                time.sleep(float(spec.get("seconds", 0.0)))
+                self.clock.sleep(float(spec.get("seconds", 0.0)))
         if self.enforce_deadlines:
             expired, inadmissible = self.queue.shed_hopeless(
                 self._tick, self.batch_size

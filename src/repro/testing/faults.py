@@ -20,7 +20,16 @@ site                       ``when`` counter (owner)
 ``SITE_SHARD_FAILURE``     engine dispatch ordinal
 ``SITE_STRAGGLER``         scheduler tick (``ContinuousBatcher``)
 ``SITE_TRAIN_NAN_LOSS``    train step (``train.resilience``)
+``SITE_REPLICA_LOSS``      fleet dispatch ordinal (``serve.frontend``)
+``SITE_REPLICA_SLOW``      fleet dispatch ordinal (``serve.frontend``)
 =========================  ============================================
+
+The two fleet sites cover the replicated serving layer: REPLICA_LOSS
+(payload ``replica=k``) kills replica k right before the Nth fleet
+dispatch — its queued and in-flight requests must be re-routed, never
+dropped; REPLICA_SLOW (payload ``factor=x``) inflates the service time
+of the Nth dispatch (a degraded node), which must show up as latency,
+not as a stuck event loop.
 
 A fired fault is consumed (popped) and logged in :attr:`FaultInjector.
 fired`, so one ``schedule`` call produces exactly one fault — same
@@ -44,6 +53,8 @@ SITE_CACHE_EVICTION = "cache-eviction"
 SITE_SHARD_FAILURE = "shard-failure"
 SITE_STRAGGLER = "straggler"
 SITE_TRAIN_NAN_LOSS = "train-nan-loss"
+SITE_REPLICA_LOSS = "replica-loss"
+SITE_REPLICA_SLOW = "replica-slow"
 
 ALL_SITES = (
     SITE_PANEL_NANS,
@@ -53,6 +64,8 @@ ALL_SITES = (
     SITE_SHARD_FAILURE,
     SITE_STRAGGLER,
     SITE_TRAIN_NAN_LOSS,
+    SITE_REPLICA_LOSS,
+    SITE_REPLICA_SLOW,
 )
 
 

@@ -11,7 +11,6 @@ import pytest
 from repro.core import dnn
 from repro.core.semiring import get_semiring
 from repro.kernels import bcsr_spmm as bcsr_kernel
-from repro.kernels import bsr_spmm as bsr_kernel
 from repro.kernels import ops, ref
 from repro.sparse import BlockCSRMatrix, BlockSparseMatrix, ops as sops
 

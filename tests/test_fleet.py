@@ -1,0 +1,303 @@
+"""Replicated fleet serving: router affinity, replica isolation,
+replica-loss failover without drops, backpressure, fault-inflated
+latency, and bit-determinism of the whole front-end under a virtual
+clock — with a guard proving zero real sleeps."""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (
+    FleetFrontend,
+    LoadProfile,
+    ReplicaFleet,
+    ServiceModel,
+    SparseDNNEngine,
+    VirtualClock,
+    generate_jobs,
+)
+from repro.serve.fleet import REASON_AFFINITY, REASON_CLAIM, REASON_FAILOVER
+from repro.sparse import BlockSparseMatrix
+from repro.testing.faults import (
+    SITE_REPLICA_LOSS,
+    SITE_REPLICA_SLOW,
+    FaultInjector,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_real_sleep(monkeypatch):
+    """The CI fleet job's contract: every serving test here runs on
+    virtual time only — one real sleep is a failure."""
+
+    def _boom(seconds):
+        raise AssertionError(f"real time.sleep({seconds}) in a virtual-clock test")
+
+    monkeypatch.setattr(time, "sleep", _boom)
+
+
+M = 32
+CLASSES = (8, 16)
+
+
+def _stack(seed=0, L=2, m=M, bpr=2, block=16):
+    ks = jax.random.split(jax.random.key(seed), L)
+    ws = [
+        BlockSparseMatrix.random(k, (m, m), (block, block), blocks_per_row=bpr)
+        for k in ks
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+    return ws, bs
+
+
+def _fleet(ws, bs, n=3, **kw):
+    engines = [SparseDNNEngine(ws, bs, batch_align=8) for _ in range(n)]
+    return ReplicaFleet(engines, width_classes=CLASSES, **kw)
+
+
+def _trace(seed=5, rate=30.0, duration=2.0, deadline_s=None):
+    return generate_jobs(
+        LoadProfile.constant(rate),
+        duration,
+        m=M,
+        seed=seed,
+        width_mix=((2, 0.6), (12, 0.4)),
+        deadline_s=deadline_s,
+    )
+
+
+def _run(fleet, jobs, **kw):
+    clock = VirtualClock()
+    fe = FleetFrontend(
+        fleet,
+        clock=clock,
+        service_model=ServiceModel(base_s=1e-3, per_grid_step_s=1e-4),
+        **kw,
+    )
+    return fe, fe.run(jobs)
+
+
+# ---------------------------------------------------------------------
+# construction / isolation
+# ---------------------------------------------------------------------
+
+
+def test_replicas_must_not_share_plan_cache():
+    ws, bs = _stack()
+    a = SparseDNNEngine(ws, bs, batch_align=8)
+    b = SparseDNNEngine(ws, bs, batch_align=8, plan_cache=a.plan_cache)
+    with pytest.raises(ValueError, match="share a plan_cache"):
+        ReplicaFleet([a, b], width_classes=CLASSES)
+
+
+def test_replicas_must_share_one_topology():
+    ws, bs = _stack(0)
+    ws2, bs2 = _stack(1, L=3)
+    with pytest.raises(ValueError, match="different topologies"):
+        ReplicaFleet(
+            [
+                SparseDNNEngine(ws, bs, batch_align=8),
+                SparseDNNEngine(ws2, bs2, batch_align=8),
+            ],
+            width_classes=CLASSES,
+        )
+
+
+def test_per_replica_caches_and_ladders_are_distinct():
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs)
+    caches = {id(r.engine.plan_cache) for r in fleet.replicas}
+    ladders = {id(r.engine.ladder) for r in fleet.replicas}
+    assert len(caches) == len(ladders) == 3
+
+
+# ---------------------------------------------------------------------
+# router: width-class affinity
+# ---------------------------------------------------------------------
+
+
+def test_affinity_one_compile_per_owned_class_and_high_hit_rate():
+    """The ISSUE's headline routing property: 2 width classes across 3
+    replicas — each class compiles ONCE, on its owning replica; the
+    fleet-wide plan-cache hit rate stays >= 0.9."""
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs)
+    jobs = _trace(rate=40.0, duration=2.0)
+    assert len(jobs) >= 30
+    fe, stats = _run(fleet, jobs)
+    f = stats["fleet"]
+    assert stats["served_jobs"] == len(jobs)
+    # Two classes -> two distinct owners, one compile each; the third
+    # replica never compiles.
+    owners = {int(c): i for c, i in f["owners"].items()}
+    assert set(owners) == {8, 16}
+    assert len(set(owners.values())) == 2
+    per = {r["replica"]: r for r in f["per_replica"]}
+    for cls, owner in owners.items():
+        assert per[owner]["compiled_classes"] == [cls]
+        assert per[owner]["compiles"] == 1
+    idle = (set(per) - set(owners.values())).pop()
+    assert per[idle]["compiles"] == 0
+    assert f["cross_replica_compiles"] == 0
+    assert f["plan_hit_rate"] >= 0.9
+    reasons = {d.reason for d in fleet.decisions}
+    assert REASON_CLAIM in reasons and REASON_AFFINITY in reasons
+
+
+def test_fleet_outputs_match_single_engine_reference():
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs)
+    jobs = _trace(seed=9, rate=25.0, duration=1.5)
+    fe, stats = _run(fleet, jobs)
+    ref = SparseDNNEngine(ws, bs, batch_align=8)
+    assert set(fe.results) == {j.rid for j in jobs}
+    for job in jobs:
+        expect, _ = ref.infer(job.features)
+        got = fe.results[job.rid]
+        assert got.shape == job.features.shape
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(expect), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_router_spills_off_a_backed_up_owner():
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs, affinity_slack=0)
+    # One class, a dense arrival burst: with zero slack the router must
+    # fan the backlog across replicas instead of piling on the owner.
+    jobs = generate_jobs(
+        LoadProfile.constant(200.0),
+        0.5,
+        m=M,
+        seed=2,
+        width_mix=((2, 1.0),),
+    )
+    fe, stats = _run(fleet, jobs)
+    dispatched = [r["dispatches"] for r in stats["fleet"]["per_replica"]]
+    assert sum(dispatched) == len(jobs)
+    assert sum(1 for d in dispatched if d > 0) >= 2
+    assert stats["fleet"]["routing"].get("spill", 0) > 0
+
+
+# ---------------------------------------------------------------------
+# replica loss: failover without drops
+# ---------------------------------------------------------------------
+
+
+def test_replica_loss_mid_trace_drops_nothing():
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs)
+    jobs = _trace(seed=13, rate=60.0, duration=1.5)
+    inj = FaultInjector()
+    # Fire while the fleet is saturated so replica 0 has queued AND
+    # in-flight work to orphan.
+    inj.schedule(SITE_REPLICA_LOSS, 8, replica=0)
+    fe, stats = _run(fleet, jobs, fault_injector=inj)
+    assert inj.pending() == 0
+    f = stats["fleet"]
+    assert f["alive"] == 2
+    assert not fleet.replicas[0].alive
+    # THE no-drop guarantee: every offered job completes successfully.
+    assert stats["offered_jobs"] == len(jobs)
+    assert stats["served_jobs"] == len(jobs)
+    assert stats["failed_jobs"] == stats["rejected_jobs"] == 0
+    assert stats["requeued_jobs"] >= 1
+    [event] = f["events"]
+    assert event["event"] == "replica-loss" and event["replica"] == 0
+    assert event["requeued_jobs"] == stats["requeued_jobs"]
+    assert any(d.reason == REASON_FAILOVER for d in fleet.decisions)
+    # Survivors re-claimed replica 0's classes.
+    assert set(f["owners"].values()) <= {1, 2}
+    # Outputs still correct after failover.
+    ref = SparseDNNEngine(ws, bs, batch_align=8)
+    for job in jobs[:5]:
+        expect, _ = ref.infer(job.features)
+        np.testing.assert_allclose(
+            np.asarray(fe.results[job.rid]),
+            np.asarray(expect),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_slow_replica_inflates_latency_not_correctness():
+    ws, bs = _stack()
+    jobs = _trace(seed=4, rate=20.0, duration=1.0)
+    _, base = _run(_fleet(ws, bs), jobs)
+    inj = FaultInjector()
+    inj.schedule(SITE_REPLICA_SLOW, 0, factor=100.0)
+    _, slow = _run(_fleet(ws, bs), jobs, fault_injector=inj)
+    assert inj.pending() == 0
+    assert slow["served_jobs"] == base["served_jobs"] == len(jobs)
+    assert slow["latency_max_s"] > 10 * base["latency_max_s"]
+
+
+# ---------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------
+
+
+def test_bounded_admission_rejects_overload():
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs)
+    jobs = generate_jobs(
+        LoadProfile.bursty(10.0, 400.0, 1.0, 0.5),
+        1.0,
+        m=M,
+        seed=6,
+        width_mix=((12, 1.0),),
+    )
+    fe, stats = _run(fleet, jobs, max_pending_cols=36)
+    assert stats["rejected_jobs"] > 0
+    assert stats["admitted_jobs"] + stats["rejected_jobs"] == len(jobs)
+    # Rejected jobs were never queued, dispatched, or completed.
+    assert stats["served_jobs"] == stats["admitted_jobs"]
+    assert set(fe.rejected).isdisjoint(fe.results)
+    assert stats["miss_rate"] >= stats["rejected_jobs"] / len(jobs)
+
+
+def test_deadline_misses_counted_against_goodput():
+    ws, bs = _stack()
+    fleet = _fleet(ws, bs)
+    # Deadlines below the service model's floor (base_s alone): every
+    # job must miss-but-serve, never fail.
+    jobs = _trace(seed=8, rate=120.0, duration=0.5, deadline_s=0.0005)
+    fe, stats = _run(fleet, jobs)
+    assert stats["served_jobs"] == len(jobs)
+    assert stats["deadline_misses"] > 0
+    assert stats["miss_rate"] > 0
+    assert stats["goodput_cols_per_s"] < stats["throughput_cols_per_s"]
+
+
+# ---------------------------------------------------------------------
+# determinism / lifecycle
+# ---------------------------------------------------------------------
+
+
+def test_frontend_is_bit_deterministic():
+    ws, bs = _stack()
+    jobs = _trace(seed=21, rate=50.0, duration=1.0, deadline_s=0.05)
+
+    def inj():
+        i = FaultInjector()
+        i.schedule(SITE_REPLICA_LOSS, 5, replica=1)
+        i.schedule(SITE_REPLICA_SLOW, 9, factor=7.0)
+        return i
+
+    _, a = _run(_fleet(ws, bs), jobs, fault_injector=inj())
+    _, b = _run(_fleet(ws, bs), jobs, fault_injector=inj())
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_frontend_runs_once_and_handles_empty_trace():
+    ws, bs = _stack()
+    fe = FleetFrontend(_fleet(ws, bs), clock=VirtualClock())
+    stats = fe.run([])
+    assert stats["offered_jobs"] == 0
+    assert stats["throughput_cols_per_s"] == 0.0
+    with pytest.raises(RuntimeError, match="one trace"):
+        fe.run([])

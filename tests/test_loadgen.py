@@ -1,0 +1,222 @@
+"""Injectable clocks and the open-loop load generator: virtual time
+semantics, profile shapes, trace determinism, and the no-real-sleep
+contract for clock-routed backoff/straggler stalls."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (
+    Clock,
+    ContinuousBatcher,
+    LoadProfile,
+    SparseDNNEngine,
+    VirtualClock,
+    WallClock,
+    generate_jobs,
+)
+from repro.sparse import BlockSparseMatrix
+from repro.testing.faults import (
+    SITE_STEP_TRANSIENT,
+    SITE_STRAGGLER,
+    FaultInjector,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_real_sleep(monkeypatch):
+    """Every test in this file must finish without one real sleep —
+    the same guard the CI fleet job runs the serving tests under."""
+
+    def _boom(seconds):
+        raise AssertionError(f"real time.sleep({seconds}) in a virtual-clock test")
+
+    monkeypatch.setattr(time, "sleep", _boom)
+
+
+def _bsr_stack(seed, L, m, bpr=2, block=16):
+    ks = jax.random.split(jax.random.key(seed), L)
+    ws = [
+        BlockSparseMatrix.random(k, (m, m), (block, block), blocks_per_row=bpr)
+        for k in ks
+    ]
+    bs = [jnp.zeros((m,), jnp.float32) for _ in range(L)]
+    return ws, bs
+
+
+# ---------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------
+
+
+def test_virtual_clock_advances_and_records():
+    c = VirtualClock(start=5.0)
+    assert c.now() == 5.0
+    c.sleep(1.5)
+    c.sleep(0.0)
+    assert c.now() == 6.5
+    assert c.sleeps == [1.5, 0.0]
+    assert c.slept_total == 1.5
+    c.advance_to(10.0)
+    assert c.now() == 10.0
+
+
+def test_virtual_clock_is_monotonic():
+    c = VirtualClock()
+    c.advance_to(2.0)
+    with pytest.raises(ValueError):
+        c.advance_to(1.0)
+    with pytest.raises(ValueError):
+        c.sleep(-0.1)
+
+
+def test_clock_protocol_covers_both_implementations():
+    assert isinstance(WallClock(), Clock)
+    assert isinstance(VirtualClock(), Clock)
+
+
+# ---------------------------------------------------------------------
+# load profiles
+# ---------------------------------------------------------------------
+
+
+def test_constant_profile():
+    p = LoadProfile.constant(12.0)
+    assert p.rate(0.0) == p.rate(99.0) == 12.0
+    assert p.peak == 12.0
+    with pytest.raises(ValueError):
+        LoadProfile.constant(0.0)
+
+
+def test_diurnal_profile_trough_and_peak():
+    p = LoadProfile.diurnal(base=10.0, amplitude=20.0, period=4.0)
+    assert p.peak == 30.0
+    assert p.rate(1.0) == pytest.approx(30.0)  # sin peak at period/4
+    assert p.rate(3.0) == pytest.approx(10.0)  # trough at 3*period/4
+    assert min(p.rate(t / 10) for t in range(100)) >= 10.0 - 1e-9
+    assert max(p.rate(t / 10) for t in range(100)) <= 30.0 + 1e-9
+
+
+def test_bursty_profile_windows():
+    p = LoadProfile.bursty(base=5.0, burst_rate=50.0, burst_every=10.0, burst_len=2.0)
+    assert p.peak == 50.0
+    assert p.rate(0.5) == 50.0  # inside the burst window
+    assert p.rate(3.0) == 5.0  # outside
+    assert p.rate(11.9) == 50.0  # next window
+    with pytest.raises(ValueError):
+        LoadProfile.bursty(5.0, 4.0, 10.0, 2.0)  # burst below base
+    with pytest.raises(ValueError):
+        LoadProfile.bursty(5.0, 50.0, 2.0, 10.0)  # len > every
+
+
+def test_scaled_profile():
+    p = LoadProfile.bursty(5.0, 50.0, 10.0, 2.0).scaled(2.0)
+    assert p.rate(0.5) == 100.0
+    assert p.rate(3.0) == 10.0
+    assert p.peak == 100.0
+    with pytest.raises(ValueError):
+        p.scaled(0.0)
+
+
+# ---------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------
+
+
+def test_generate_jobs_deterministic():
+    kw = dict(m=32, seed=11, width_mix=((2, 0.5), (8, 0.5)), deadline_s=0.25)
+    a = generate_jobs(LoadProfile.constant(40.0), 2.0, **kw)
+    b = generate_jobs(LoadProfile.constant(40.0), 2.0, **kw)
+    assert [j.t for j in a] == [j.t for j in b]
+    assert [j.cols for j in a] == [j.cols for j in b]
+    for ja, jb in zip(a, b):
+        assert np.array_equal(np.asarray(ja.features), np.asarray(jb.features))
+    c = generate_jobs(LoadProfile.constant(40.0), 2.0, **{**kw, "seed": 12})
+    assert [j.t for j in a] != [j.t for j in c]
+
+
+def test_generate_jobs_shapes_and_deadlines():
+    jobs = generate_jobs(
+        LoadProfile.constant(30.0),
+        3.0,
+        m=16,
+        seed=0,
+        width_mix=((1, 0.7), (4, 0.3)),
+        deadline_s=0.5,
+    )
+    assert jobs, "a 30 Hz trace over 3 s should produce arrivals"
+    assert [j.rid for j in jobs] == list(range(len(jobs)))
+    assert all(0.0 < j.t < 3.0 for j in jobs)
+    assert [j.t for j in jobs] == sorted(j.t for j in jobs)
+    assert {j.cols for j in jobs} <= {1, 4}
+    for j in jobs:
+        assert j.features.shape == (16, j.cols)
+        assert j.deadline == pytest.approx(j.t + 0.5)
+    nodeadline = generate_jobs(LoadProfile.constant(30.0), 1.0, m=16, seed=0)
+    assert all(j.deadline is None for j in nodeadline)
+
+
+def test_thinning_concentrates_arrivals_in_bursts():
+    p = LoadProfile.bursty(base=2.0, burst_rate=60.0, burst_every=5.0, burst_len=1.0)
+    jobs = generate_jobs(p, 20.0, m=8, seed=3)
+    in_burst = sum(1 for j in jobs if (j.t % 5.0) < 1.0)
+    out_burst = len(jobs) - in_burst
+    # Burst windows are 1/5 of the time at 30x the rate: the bulk of
+    # arrivals must land inside them.
+    assert in_burst > 3 * out_burst
+
+
+def test_generate_jobs_validation():
+    with pytest.raises(ValueError):
+        generate_jobs(LoadProfile.constant(1.0), 0.0, m=8, seed=0)
+    with pytest.raises(ValueError):
+        generate_jobs(
+            LoadProfile.constant(1.0), 1.0, m=8, seed=0, width_mix=((0, 1.0),)
+        )
+
+
+# ---------------------------------------------------------------------
+# clock-routed stalls: backoff and stragglers under virtual time
+# ---------------------------------------------------------------------
+
+
+def test_engine_retry_backoff_through_virtual_clock():
+    ws, bs = _bsr_stack(0, 2, 32)
+    inj = FaultInjector()
+    inj.schedule(SITE_STEP_TRANSIENT, 0, failures=2)
+    clock = VirtualClock()
+    eng = SparseDNNEngine(
+        ws,
+        bs,
+        batch_align=4,
+        fault_injector=inj,
+        max_step_retries=2,
+        retry_backoff_s=0.1,
+        clock=clock,
+    )
+    eng.submit(jax.random.uniform(jax.random.key(1), (32, 2)))
+    out, stats = eng.step()
+    assert out is not None and not stats["failed"]
+    assert stats["retries"] == 2
+    # Exponential backoff 0.1, 0.2 — recorded on the virtual clock, no
+    # real stall (the autouse guard would have raised).
+    assert clock.sleeps == pytest.approx([0.1, 0.2])
+
+
+def test_batcher_straggler_through_virtual_clock():
+    ws, bs = _bsr_stack(1, 2, 32)
+    inj = FaultInjector()
+    inj.schedule(SITE_STRAGGLER, 0, seconds=1.25)
+    clock = VirtualClock()
+    eng = SparseDNNEngine(ws, bs, batch_align=4)
+    b = ContinuousBatcher(
+        eng, batch_size=4, fault_injector=inj, clock=clock
+    )
+    b.submit(jax.random.uniform(jax.random.key(2), (32,)))
+    b.drain()
+    s = b.stats()
+    assert s.faults.straggler_ticks == 1
+    assert clock.slept_total == pytest.approx(1.25)

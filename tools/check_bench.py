@@ -89,6 +89,22 @@ PARAMS = {
         "density",
         "seed",
     ),
+    "fleet": (
+        "m",
+        "layers",
+        "blocks_per_row",
+        "duration_s",
+        "seed",
+        "replicas",
+        "rate_factors",
+        "miss_budget",
+        "profile",
+        "width_classes",
+        "width_mix",
+        "deadline_s",
+        "service_model",
+        "max_pending_cols",
+    ),
 }
 
 EXACT = {
@@ -197,6 +213,27 @@ CHALLENGE_EXACT = (
     "grid_steps",
     "n_categories",
     "reference_match",
+)
+# Fleet arm (replicated serving on a virtual clock): every curve point
+# is a pure function of the generator config — latencies, miss rates,
+# throughput and routing/plan-cache accounting are all checked exactly;
+# only the arm's own wall_time_s (real compute time of the sweep) is
+# gated tolerantly.
+FLEET_POINT_EXACT = (
+    "offered_jobs",
+    "served_jobs",
+    "failed_jobs",
+    "rejected_jobs",
+    "deadline_misses",
+    "miss_rate",
+    "latency_p50_s",
+    "latency_p99_s",
+    "latency_max_s",
+    "throughput_cols_per_s",
+    "goodput_cols_per_s",
+    "plan_hit_rate",
+    "cross_replica_compiles",
+    "routing",
 )
 # Deterministic serve accounting, checked exactly for BOTH arms.
 SERVE_EXACT = (
@@ -488,6 +525,64 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
         wt_b, wt_f = bs.get("wall_time_s"), fs.get("wall_time_s")
         if wt_b is not None and wt_f is not None:
             gate.time("challenge", "wall_time_s", wt_b, wt_f)
+
+    # --- fleet: replicated-serving curves exact, headlines gated ------
+    pair = _section_pair(gate, "fleet", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for arm in ("single", "fleet"):
+            b_pts = bs.get("curves", {}).get(arm, [])
+            f_pts = fs.get("curves", {}).get(arm, [])
+            if len(b_pts) != len(f_pts):
+                gate.missing(f"fleet.{arm}", "curve points")
+                continue
+            for bp, fp in zip(b_pts, f_pts):
+                name = f"fleet.{arm}@x{bp.get('rate_factor', '?')}"
+                for field in FLEET_POINT_EXACT:
+                    if field not in bp:
+                        gate.skip(name, f"{field} absent from baseline")
+                        continue
+                    if field not in fp:
+                        gate.missing(name, field)
+                        continue
+                    gate.exact(name, field, bp[field], fp[field])
+        for field in ("sustained_jobs_per_s", "fleet_plan_hit_rate_min"):
+            if field not in bs:
+                gate.skip("fleet", f"{field} absent from baseline")
+            elif field not in fs:
+                gate.missing("fleet", field)
+            else:
+                gate.exact("fleet", field, bs[field], fs[field])
+        # headline invariants, gated regardless of baseline drift: the
+        # replicated fleet must sustain strictly more offered load than
+        # one engine at the same miss budget, and the affinity router
+        # must hold the fleet-wide plan-cache hit rate at >= 0.9
+        sus = fs.get("sustained_jobs_per_s", {})
+        single_s, fleet_s = sus.get("single"), sus.get("fleet")
+        if single_s is None or fleet_s is None:
+            gate.missing("fleet", "sustained_jobs_per_s")
+        else:
+            gate._add(
+                "fleet",
+                "sustained: fleet > single",
+                single_s,
+                fleet_s,
+                "ok" if fleet_s > single_s else "FAIL",
+            )
+        hit = fs.get("fleet_plan_hit_rate_min")
+        if hit is None:
+            gate.missing("fleet", "fleet_plan_hit_rate_min")
+        else:
+            gate._add(
+                "fleet",
+                "plan_hit_rate_min >= 0.9",
+                0.9,
+                hit,
+                "ok" if hit >= 0.9 else "FAIL",
+            )
+        wt_b, wt_f = bs.get("wall_time_s"), fs.get("wall_time_s")
+        if wt_b is not None and wt_f is not None:
+            gate.time("fleet", "wall_time_s", wt_b, wt_f)
 
     # --- serve: deterministic accounting exact, pad waste gated -------
     pair = _section_pair(gate, "serve", baseline, fresh)

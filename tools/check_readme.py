@@ -31,6 +31,7 @@ README = REPO_ROOT / "README.md"
 FENCED_DOCS = [
     "docs/architecture.md",
     "docs/robustness.md",
+    "docs/serving.md",
 ]
 
 # Example scripts with a fast deterministic mode, run by the CI docs job
