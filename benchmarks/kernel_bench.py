@@ -106,6 +106,7 @@ from repro.sparse import ops as sparse_ops
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
 FLEET_CURVES_PATH = os.path.join(REPO_ROOT, "BENCH_fleet_curves.json")
+TUNING_TABLE_PATH = os.path.join(REPO_ROOT, "BENCH_tuning_table.json")
 
 
 def _grid_steps_ell(a: BlockSparseMatrix, n: int, block_n: int = 128) -> int:
@@ -866,6 +867,184 @@ def challenge_arm(
     }
 
 
+def tune_arm(
+    skewed_specs,
+    skew: float,
+    block: int,
+    width: int,
+    reps: int,
+    neurons: int,
+    layers: int,
+    radix_width: int,
+    density: float,
+    seed: int,
+):
+    """The TUNE arm — the autotuner sweep (``repro.tune``) on two
+    topologies where the default config is beatable, writing the winning
+    table to ``BENCH_tuning_table.json`` for the CI artifact upload.
+
+    **Skewed stack**: rectangular layers with per-row-skewed block
+    counts — the default layout heuristic keeps ELL (waste stays under
+    ``ELL_WASTE_THRESHOLD``), but forcing block-CSR drops the exact
+    grid-step bill, so the sweep's cost-model scoring must pick
+    ``layout=bcsr`` and the tuned plan must bill strictly fewer steps
+    (and, recorded but not asserted: run faster).
+
+    **RadiX-net stack**: sized so the f32 fused panel (16 MiB at
+    ``neurons=8192``) busts ``VMEM_SOFT_LIMIT_BYTES`` while the bf16
+    panel (8 MiB) fits — the tuned config moves the route from
+    fused-tiled back to resident fused. The resident plan is *built*
+    for the route assertion but never executed here: interpret-mode
+    compilation of the resident kernel at this size takes minutes,
+    and the tiled bf16 kernel computes the identical panels (same
+    per-block f32-accumulate contraction), so accuracy and wall time
+    are measured through the tiled route on the challenge-shaped
+    {0, 1} input panel.
+    """
+    from repro import plan as plan_mod
+    from repro import tune
+    from repro.data import radixnet as rx
+    from repro.kernels.fused_mlp import (
+        VMEM_SOFT_LIMIT_BYTES,
+        fused_mlp_vmem_bytes,
+    )
+
+    table = tune.TuningTable()
+
+    # --- skewed stack: layout=bcsr must win the sweep ----------------
+    ws = [
+        BlockCSRMatrix.random_skewed(
+            i, shape, (block, block), total, skew=skew
+        ).to_bsr()
+        for i, (shape, total) in enumerate(skewed_specs)
+    ]
+    bs = [jnp.zeros((w.shape[0],), jnp.float32) for w in ws]
+    winner, records = tune.sweep_stack(ws, bs, width, reps=reps)
+    winner_rec = next(r for r in records if r["selected"])
+    default_rec = next(r for r in records if r["token"] == "default")
+    tune.tune_stack(ws, bs, width, table=table, sweep=(winner, records))
+    skewed = {
+        "specs": [[list(shape), total] for shape, total in skewed_specs],
+        "skew": skew,
+        "block": block,
+        "width": width,
+        "winner": winner.token(),
+        "route_tuned": winner_rec["route"],
+        "route_default": default_rec["route"],
+        "grid_steps_tuned": winner_rec["grid_steps"],
+        "grid_steps_default": default_rec["grid_steps"],
+        "block_work_tuned": winner_rec["block_work"],
+        "block_work_default": default_rec["block_work"],
+        "max_abs_err": winner_rec["max_abs_err"],
+        "accuracy_ok": winner_rec["ok"],
+        "wall_s_tuned": winner_rec["wall_s"],
+        "wall_s_default": default_rec["wall_s"],
+        "candidates": [
+            {
+                k: r[k]
+                for k in (
+                    "token", "route", "grid_steps", "block_work", "ok",
+                    "selected", "error",
+                )
+                if k in r
+            }
+            for r in records
+        ],
+    }
+
+    # --- RadiX-net stack: bf16 panels move the resident boundary -----
+    spec = rx.RadixNetSpec(neurons, layers)
+    rws, rbs = rx.radixnet_weights(spec, block_size=block)
+    probe = jnp.asarray(
+        rx.radixnet_input_panel(
+            neurons, radix_width, density=density, seed=seed
+        ),
+        jnp.float32,
+    )
+    vmem_f32 = fused_mlp_vmem_bytes(neurons)
+    vmem_bf16 = fused_mlp_vmem_bytes(neurons, panel_dtype="bfloat16")
+
+    bf16_cfg = tune.TunedConfig(panel_dtype="bfloat16")
+    default_plan = plan_mod.build_plan(rws, rbs, radix_width)
+    bf16_plan = plan_mod.build_plan(
+        rws, rbs, radix_width, tuned=bf16_cfg
+    )  # built for the route assertion only — never forwarded here
+    # Tiled twin of the bf16 resident plan: identical kernel math,
+    # forced off the resident route by an under-cutting budget.
+    bf16_tiled_plan = plan_mod.build_plan(
+        rws,
+        rbs,
+        radix_width,
+        tuned=tune.TunedConfig(
+            panel_dtype="bfloat16", vmem_limit_bytes=vmem_bf16 - 1
+        ),
+    )
+    ref = np.asarray(default_plan.forward(probe), np.float32)
+    out = np.asarray(bf16_tiled_plan.forward(probe), np.float32)
+    bf16_err = float(np.max(np.abs(out - ref)))
+    wall_f32 = timeit(default_plan.forward, probe)
+    wall_bf16 = timeit(bf16_tiled_plan.forward, probe)
+    table.put(
+        plan_mod.topology_fingerprint(rws),
+        jax.default_backend(),
+        "float32",
+        bf16_cfg,
+        {
+            "width": radix_width,
+            "route": bf16_plan.route,
+            "default_route": default_plan.route,
+            "grid_steps": int(bf16_plan.grid_steps),
+            "default_grid_steps": int(default_plan.grid_steps),
+            "vmem_bytes": int(vmem_bf16),
+            "default_vmem_bytes": int(vmem_f32),
+            "max_abs_err": bf16_err,
+            "accuracy_via": "fused-tiled bf16 twin",
+        },
+    )
+    radix = {
+        "neurons": neurons,
+        "layers": layers,
+        "width": radix_width,
+        "density": density,
+        "seed": seed,
+        "winner": bf16_cfg.token(),
+        "route_default": default_plan.route,
+        "route_tuned": bf16_plan.route,
+        "grid_steps_default": int(default_plan.grid_steps),
+        "grid_steps_tuned": int(bf16_plan.grid_steps),
+        "vmem_bytes_f32": int(vmem_f32),
+        "vmem_bytes_bf16": int(vmem_bf16),
+        "vmem_soft_limit": int(VMEM_SOFT_LIMIT_BYTES),
+        "bf16_max_abs_err": bf16_err,
+        "wall_s_f32_tiled": wall_f32,
+        "wall_s_bf16_tiled": wall_bf16,
+    }
+
+    table.save(TUNING_TABLE_PATH)
+    return {
+        # Flat generator-param record: tools/check_bench.py compares
+        # this whole dict to decide baseline comparability.
+        "params": {
+            "skewed_specs": [
+                [list(shape), total] for shape, total in skewed_specs
+            ],
+            "skew": skew,
+            "block": block,
+            "width": width,
+            "reps": reps,
+            "neurons": neurons,
+            "layers": layers,
+            "radix_width": radix_width,
+            "density": density,
+            "seed": seed,
+        },
+        "skewed": skewed,
+        "radix": radix,
+        "table_entries": len(table),
+        "table_path": os.path.basename(TUNING_TABLE_PATH),
+    }
+
+
 def fleet_arm(
     m: int,
     L: int,
@@ -1018,7 +1197,7 @@ def fleet_arm(
 
 ALL_ARMS = (
     "topologies", "fused", "train", "serve", "plan", "sharded", "faults",
-    "challenge", "fleet",
+    "challenge", "tune", "fleet",
 )
 
 
@@ -1289,6 +1468,62 @@ def run(quick: bool = False, arms=None):
         assert 0 < challenge["n_categories"] < challenge["n_inputs"]
         assert challenge["served"] == challenge["n_inputs"]
         payload["challenge"] = challenge
+
+    if "tune" in arms:
+        # Tune arm: fixed config in quick AND full runs — the sweep is
+        # cost-model-scored, so every accounting field is exact.
+        tune = tune_arm(
+            skewed_specs=(
+                ((128, 256), 100),
+                ((128, 128), 55),
+                ((64, 128), 28),
+            ),
+            skew=0.3,
+            block=16,
+            width=64,
+            reps=3,
+            neurons=8192,
+            layers=2,
+            radix_width=32,
+            density=0.3,
+            seed=2,
+        )
+        sk, rad = tune["skewed"], tune["radix"]
+        print(
+            f"tune: skewed winner {sk['winner']}  steps "
+            f"{sk['grid_steps_default']}→{sk['grid_steps_tuned']}  "
+            f"wall {sk['wall_s_default']*1e3:.2f}ms"
+            f"→{sk['wall_s_tuned']*1e3:.2f}ms  |  "
+            f"radix {rad['neurons']}x{rad['layers']} "
+            f"{rad['winner']}: route {rad['route_default']}"
+            f"→{rad['route_tuned']} (panel "
+            f"{rad['vmem_bytes_f32']>>20}MiB→{rad['vmem_bytes_bf16']>>20}MiB"
+            f" vs {rad['vmem_soft_limit']>>20}MiB budget)  "
+            f"bf16 err {rad['bf16_max_abs_err']:.4f}",
+            flush=True,
+        )
+        # tune arm headline: the sweep's deterministic cost-model
+        # scoring finds a config that STRICTLY beats the default — on
+        # the skewed stack a forced block-CSR layout drops the exact
+        # grid-step bill, and on the over-budget RadiX-net stack bf16
+        # activation panels halve the resident footprint and move the
+        # route from fused-tiled back to fused, with numerics inside
+        # the gate on challenge-shaped inputs.
+        assert sk["winner"] == "layout=bcsr", sk
+        assert sk["grid_steps_tuned"] < sk["grid_steps_default"], sk
+        assert sk["block_work_tuned"] < sk["block_work_default"], sk
+        assert sk["accuracy_ok"], sk
+        assert rad["route_default"] == "fused-tiled", rad
+        assert rad["route_tuned"] == "fused", rad
+        assert (
+            rad["vmem_bytes_bf16"]
+            <= rad["vmem_soft_limit"]
+            < rad["vmem_bytes_f32"]
+        ), rad
+        assert rad["bf16_max_abs_err"] <= 0.05, rad
+        assert tune["table_entries"] == 2, tune
+        payload["tune"] = tune
+        print(f"wrote {TUNING_TABLE_PATH}")
 
     if "fleet" in arms:
         # Fleet arm: identical config in quick and full runs (virtual

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.core import graphblas as gb
 from repro.core.semiring import MAX_PLUS, PLUS_TIMES
+from repro.kernels import DEFAULT_BLOCK_N
 from repro.sparse import ops as sparse_ops
 from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
@@ -87,7 +88,9 @@ def to_preferred_layout(w: Weight) -> Weight:
     return _plan_layout.to_preferred_layout(w)
 
 
-def layer_grid_steps(w: Weight, n: int, *, block_n: int = 128) -> int:
+def layer_grid_steps(
+    w: Weight, n: int, *, block_n: int = DEFAULT_BLOCK_N
+) -> int:
     """Exact kernel grid steps one forward layer executes on an (·, n)
     activation panel (alias of :func:`repro.plan.layer_grid_steps` —
     the hardware-independent cost model, see `docs/serving.md`)."""
@@ -97,7 +100,7 @@ def layer_grid_steps(w: Weight, n: int, *, block_n: int = 128) -> int:
 
 
 def dnn_grid_steps(
-    weights: Sequence[Weight], n: int, *, block_n: int = 128
+    weights: Sequence[Weight], n: int, *, block_n: int = DEFAULT_BLOCK_N
 ) -> int:
     """Total forward grid steps of the L-layer stack on an (m, n) panel
     (alias of :func:`repro.plan.stack_grid_steps`; a compiled
@@ -179,7 +182,7 @@ def dnn_forward_all(
 
 
 def resident_eligible(
-    weights: Sequence[Weight], *, block_n: int = 128
+    weights: Sequence[Weight], *, block_n: int = DEFAULT_BLOCK_N
 ) -> bool:
     """Can this stack run through the single-call VMEM-resident kernel?
     (Alias of :func:`repro.plan.resident_eligible` — the route decision
@@ -202,8 +205,10 @@ def dnn_forward_resident(
     biases: Sequence[Array],
     y0: Array,
     *,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
+    panel_dtype=None,
+    tuned=None,
     mesh=None,
 ) -> Array:
     """L-layer forward with the activation panel resident in VMEM.
@@ -218,11 +223,14 @@ def dnn_forward_resident(
     A plan-backed wrapper: with default knobs the stack's route, layout
     choices, and executable come from the shared
     :class:`repro.plan.PlanCache` — repeated calls on the same topology
-    and panel width reuse one compiled plan. Explicit ``block_n``/
-    ``interpret`` overrides take the direct path, as does any call under
-    trace (a traced topology cannot be fingerprinted host-side, and a
-    traced ``y0`` means someone is differentiating or vmapping through
-    this forward-only wrapper — the inline fallback keeps the legacy
+    and panel width reuse one compiled plan. A ``tuned`` config
+    (``repro.tune.TunedConfig``) rides into the cache key, so tuned and
+    untuned calls on the same topology each keep their own compiled
+    plan. Explicit ``block_n``/``interpret``/``panel_dtype`` overrides
+    take the direct path, as does any call under trace (a traced
+    topology cannot be fingerprinted host-side, and a traced ``y0``
+    means someone is differentiating or vmapping through this
+    forward-only wrapper — the inline fallback keeps the legacy
     XLA-differentiable behaviour for ineligible stacks).
 
     ``mesh`` overrides residency entirely: the VMEM-resident kernel is
@@ -232,17 +240,22 @@ def dnn_forward_resident(
     if mesh is not None:
         return _sharded_plan_forward(weights, biases, y0, mesh)
     if (
-        block_n == 128
+        block_n == DEFAULT_BLOCK_N
         and interpret is None
+        and panel_dtype is None
         and not _has_tracers(list(weights), list(biases), y0)
     ):
         from repro.plan import default_cache
 
-        plan = default_cache().get(weights, biases, max(y0.shape[1], 1))
+        plan = default_cache().get(
+            weights, biases, max(y0.shape[1], 1), tuned=tuned
+        )
         return plan.forward(y0)
     from repro.plan import routes as _plan_routes
 
-    route = _plan_routes.fused_route(weights, block_n=block_n)
+    route = _plan_routes.fused_route(
+        weights, block_n=block_n, panel_dtype=panel_dtype
+    )
     if route is None:
         return dnn_forward(weights, biases, y0, fused=True)
     from repro.kernels import ops as kernel_ops
@@ -251,10 +264,20 @@ def dnn_forward_resident(
     stacked_b = jnp.stack(list(biases))
     if route == _plan_routes.ROUTE_FUSED_TILED:
         return kernel_ops.fused_mlp_tiled_forward(
-            stacked_w, stacked_b, y0, block_n=block_n, interpret=interpret
+            stacked_w,
+            stacked_b,
+            y0,
+            block_n=block_n,
+            interpret=interpret,
+            panel_dtype=panel_dtype,
         )
     return kernel_ops.fused_mlp_forward(
-        stacked_w, stacked_b, y0, block_n=block_n, interpret=interpret
+        stacked_w,
+        stacked_b,
+        y0,
+        block_n=block_n,
+        interpret=interpret,
+        panel_dtype=panel_dtype,
     )
 
 

@@ -20,6 +20,12 @@ resident backward for the CSR layout); ``ops`` attaches them for the
 ``plus_times`` semiring. See docs/kernels.md for the full contract.
 """
 
-from repro.kernels import autodiff, ops, ref
+# The hand-picked column-tile width every kernel defaults to. ONE
+# definition so the autotuner (``repro.tune``) overrides it in a single
+# place; defined BEFORE the submodule imports so they can pull it from
+# the (partially initialised) package during their own import.
+DEFAULT_BLOCK_N = 128
 
-__all__ = ["autodiff", "ops", "ref"]
+from repro.kernels import autodiff, ops, ref  # noqa: E402
+
+__all__ = ["DEFAULT_BLOCK_N", "autodiff", "ops", "ref"]

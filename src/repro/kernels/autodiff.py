@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import dtypes as jax_dtypes
 
+from repro.kernels import DEFAULT_BLOCK_N
 from repro.kernels import bcsr_spmm as _bcsr
 from repro.kernels import bsr_spmm as _bsr
 from repro.kernels import fused_mlp as _fmlp
@@ -73,8 +74,8 @@ class SpmmConfig(NamedTuple):
     custom_vjp as a nondiff argument."""
 
     fuse_bias_relu: bool
-    block_n: int
-    interpret: bool
+    block_n: int = DEFAULT_BLOCK_N
+    interpret: bool = False
 
 
 def _float0_zeros(x) -> np.ndarray:
@@ -241,8 +242,11 @@ bcsr_spmm_diff.defvjp(_bcsr_fwd, _bcsr_bwd)
 
 
 class FusedMlpConfig(NamedTuple):
-    block_n: int
-    interpret: bool
+    block_n: int = DEFAULT_BLOCK_N
+    interpret: bool = False
+    # activation-panel dtype name ("bfloat16" halves the resident VMEM
+    # footprint; accumulation stays f32) — None keeps float32 panels
+    panel_dtype: str | None = None
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -252,7 +256,12 @@ def fused_mlp_forward_nondiff(
     """The fused kernel with a VJP rule that fails loudly (instead of the
     opaque pallas_call transpose error) and says what to use instead."""
     return _fmlp.fused_mlp_forward(
-        stacked_w, stacked_b, y0, block_n=cfg.block_n, interpret=cfg.interpret
+        stacked_w,
+        stacked_b,
+        y0,
+        block_n=cfg.block_n,
+        interpret=cfg.interpret,
+        panel_dtype=cfg.panel_dtype,
     )
 
 
@@ -282,7 +291,12 @@ def fused_mlp_tiled_forward_nondiff(
     fails-loudly VJP story as the resident kernel: per-layer activations
     only ever exist in the kernel's scratch buffers."""
     return _fmlp.fused_mlp_tiled_forward(
-        stacked_w, stacked_b, y0, block_n=cfg.block_n, interpret=cfg.interpret
+        stacked_w,
+        stacked_b,
+        y0,
+        block_n=cfg.block_n,
+        interpret=cfg.interpret,
+        panel_dtype=cfg.panel_dtype,
     )
 
 

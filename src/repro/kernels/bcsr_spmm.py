@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import _compat
+from repro.kernels import DEFAULT_BLOCK_N, _compat
 
 from repro.kernels.semiring_matmul import _VPU_SEMIRINGS, _vpu_tile_product
 from repro.sparse.bcsr import BlockCSRMatrix
@@ -54,7 +54,7 @@ from repro.sparse.bcsr import BlockCSRMatrix
 Array = jax.Array
 
 
-def grid_steps(a: BlockCSRMatrix, n: int, block_n: int = 128) -> int:
+def grid_steps(a: BlockCSRMatrix, n: int, block_n: int = DEFAULT_BLOCK_N) -> int:
     """Grid steps this kernel executes — ∝ stored blocks, not the ELL pad."""
     return a.total_blocks * -(-n // block_n)
 
@@ -113,7 +113,7 @@ def bcsr_spmm(
     semiring_name: str = "plus_times",
     bias: Array | None = None,
     fuse_bias_relu: bool = False,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
     out_dtype=None,
 ) -> Array:

@@ -33,12 +33,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import _compat
+from repro.kernels import DEFAULT_BLOCK_N, _compat
 
 from repro.kernels.semiring_matmul import _VPU_SEMIRINGS, _vpu_tile_product
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
+
+
+def grid_steps(a: BlockSparseMatrix, n: int, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Grid steps this kernel executes — the ELL pad is billed in full
+    (``nrb × max_blocks_per_row`` per column tile), read from the
+    weight's own layout."""
+    nrb, mbpr = a.col_idx.shape
+    return nrb * mbpr * (-(-n // block_n))
 
 
 def _kernel(
@@ -90,7 +98,7 @@ def bsr_spmm(
     semiring_name: str = "plus_times",
     bias: Array | None = None,
     fuse_bias_relu: bool = False,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
     out_dtype=None,
 ) -> Array:

@@ -41,10 +41,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import _compat
+from repro.kernels import DEFAULT_BLOCK_N, _compat
 
 from repro.sparse.bsr import BlockSparseMatrix
 
@@ -55,19 +56,41 @@ Array = jax.Array
 VMEM_SOFT_LIMIT_BYTES = 12 * 1024 * 1024
 
 
-def fused_mlp_vmem_bytes(m: int, block_n: int = 128) -> int:
-    """Scratch bytes the resident panel needs (2 panels + in/out tiles)."""
-    panel = m * block_n * 4
+def _panel_np_dtype(panel_dtype) -> np.dtype:
+    """Canonical activation-panel dtype: f32 unless the caller opts into
+    a reduced-precision panel (name, np/jnp dtype — all accepted)."""
+    return np.dtype(panel_dtype if panel_dtype is not None else np.float32)
+
+
+def fused_mlp_vmem_bytes(
+    m: int, block_n: int = DEFAULT_BLOCK_N, panel_dtype=None
+) -> int:
+    """Scratch bytes the resident panel needs (2 panels + in/out tiles).
+
+    All four (m, block_n) stripes — the ping-pong ybuf pair, the y0
+    stripe and the out stripe — are held in ``panel_dtype``, so bf16
+    panels halve this bill and move the resident↔tiled boundary
+    (accumulation stays f32 in a block-sized register tile)."""
+    panel = m * block_n * _panel_np_dtype(panel_dtype).itemsize
     return 4 * panel  # ybuf×2 + y0 stripe + out stripe
 
 
-def fused_mlp_eligible(w: BlockSparseMatrix, block_n: int = 128) -> bool:
+def fused_mlp_eligible(
+    w: BlockSparseMatrix,
+    block_n: int = DEFAULT_BLOCK_N,
+    *,
+    panel_dtype=None,
+    vmem_limit: int | None = None,
+) -> bool:
     """Square stack small enough for the panel to live in VMEM."""
     m, k = w.shape
-    return m == k and fused_mlp_vmem_bytes(m, block_n) <= VMEM_SOFT_LIMIT_BYTES
+    limit = VMEM_SOFT_LIMIT_BYTES if vmem_limit is None else vmem_limit
+    return m == k and fused_mlp_vmem_bytes(m, block_n, panel_dtype) <= limit
 
 
-def fused_mlp_tiled_eligible(w: BlockSparseMatrix, block_n: int = 128) -> bool:
+def fused_mlp_tiled_eligible(
+    w: BlockSparseMatrix, block_n: int = DEFAULT_BLOCK_N
+) -> bool:
     """Square stack of ANY height — the tiled variant keeps the panel in
     HBM scratch and holds only per-block tiles in VMEM, so there is no
     panel-size ceiling. (Dispatch still prefers the fully resident kernel
@@ -83,13 +106,14 @@ def _kernel(
     y0_ref,  # (m, bn) — this j-stripe of the input panel
     bias_ref,  # (1, bs_r, 1)
     o_ref,  # (m, bn) — this j-stripe of Y[L]
-    ybuf_ref,  # VMEM scratch (2, m, bn) f32 double-buffered panel
+    ybuf_ref,  # VMEM scratch (2, m, bn) panel_dtype double-buffered panel
     acc_ref,  # VMEM scratch (bs_r, bn) f32
     *,
     n_layers: int,
     t_steps: int,
     bs_r: int,
     bs_c: int,
+    panel_dtype,
 ):
     l = pl.program_id(1)
     i = pl.program_id(2)
@@ -97,7 +121,7 @@ def _kernel(
 
     @pl.when((l == 0) & (i == 0) & (t == 0))
     def _load_input_panel():
-        ybuf_ref[0] = y0_ref[...].astype(jnp.float32)
+        ybuf_ref[0] = y0_ref[...].astype(panel_dtype)
 
     @pl.when(t == 0)
     def _init():
@@ -114,7 +138,7 @@ def _kernel(
     def _close_row_block():
         # The paper's eWiseMult(+bias) / eWiseAdd(max 0) pair, in-register.
         val = jnp.maximum(acc_ref[...] + bias_ref[0].astype(jnp.float32), 0.0)
-        ybuf_ref[(l + 1) % 2, pl.ds(i * bs_r, bs_r), :] = val
+        ybuf_ref[(l + 1) % 2, pl.ds(i * bs_r, bs_r), :] = val.astype(panel_dtype)
 
         @pl.when(l == n_layers - 1)
         def _store_output():
@@ -126,15 +150,20 @@ def fused_mlp_forward(
     stacked_b: Array,
     y0: Array,
     *,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
     out_dtype=None,
+    panel_dtype=None,
 ) -> Array:
     """Y[L] (m, n) = relu-MLP(y0) through all L layers in one kernel.
 
     ``stacked_w.blocks``: (L, nrb, mbpr, bs_r, bs_c) — a ``stack_bsr``
     result; ``stacked_b``: (L, m). Requires square layers (m == k) and
-    ``n % block_n == 0``.
+    ``n % block_n == 0``. ``panel_dtype=jnp.bfloat16`` keeps every
+    activation stripe (ybuf pair, y0, out) in bf16 — halving
+    :func:`fused_mlp_vmem_bytes` — while the per-block accumulate and the
+    bias/ReLU epilogue stay f32; the result is cast back to
+    ``out_dtype``.
     """
     m, k = stacked_w.shape
     if m != k:
@@ -148,6 +177,8 @@ def fused_mlp_forward(
     assert n % block_n == 0, (n, block_n)
     assert stacked_b.shape == (n_layers, m), stacked_b.shape
     out_dtype = out_dtype or jnp.result_type(stacked_w.dtype, y0.dtype)
+    pdt = _panel_np_dtype(panel_dtype)
+    default_panels = pdt == np.dtype(np.float32)
 
     kernel = functools.partial(
         _kernel,
@@ -155,6 +186,7 @@ def fused_mlp_forward(
         t_steps=mbpr,
         bs_r=bs_r,
         bs_c=bs_c,
+        panel_dtype=pdt,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -175,14 +207,19 @@ def fused_mlp_forward(
         # the full output column stripe — written once per j, on layer L-1
         out_specs=pl.BlockSpec((m, block_n), lambda j, l, i, t, ci, mk: (0, j)),
         scratch_shapes=[
-            pltpu.VMEM((2, m, block_n), jnp.float32),
+            pltpu.VMEM((2, m, block_n), pdt),
             pltpu.VMEM((bs_r, block_n), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # bf16 panels: the streamed y0/out stripes are bf16 too (that is
+        # what makes the VMEM bill exactly 4 panels × itemsize); the
+        # wrapper casts back to out_dtype below.
+        out_shape=jax.ShapeDtypeStruct(
+            (m, n), out_dtype if default_panels else pdt
+        ),
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary", "arbitrary")
         ),
@@ -191,9 +228,10 @@ def fused_mlp_forward(
         stacked_w.col_idx,
         stacked_w.block_mask.astype(jnp.int32),
         stacked_w.blocks,
-        y0,
+        y0 if default_panels else y0.astype(pdt),
         stacked_b[:, :, None],
     )
+    return out if default_panels else out.astype(out_dtype)
 
 
 # --------------------------------------------------------------------------
@@ -205,13 +243,13 @@ def _tiled_kernel(
     col_idx_ref,  # scalar-prefetch (L, nrb, mbpr) int32
     mask_ref,  # scalar-prefetch (L, nrb, mbpr) int32
     blocks_ref,  # (1, 1, mbpr, bs_r, bs_c) — row-block i's stored blocks
-    y0_ref,  # full (m, n) f32, HBM (never pulled into VMEM whole)
+    y0_ref,  # full (m, n) panel_dtype, HBM (never pulled into VMEM whole)
     bias_ref,  # (1, bs_r, 1)
-    o_ref,  # full (m, n) f32, HBM
-    panel_ref,  # HBM scratch (2, m, bn) f32 ping-pong activation panel
-    ybuf_ref,  # VMEM scratch (2, bs_c, bn) f32 double-buffered gather
+    o_ref,  # full (m, n) panel_dtype, HBM
+    panel_ref,  # HBM scratch (2, m, bn) panel_dtype ping-pong activation panel
+    ybuf_ref,  # VMEM scratch (2, bs_c, bn) panel_dtype double-buffered gather
     acc_ref,  # VMEM scratch (bs_r, bn) f32
-    vout_ref,  # VMEM scratch (bs_r, bn) f32 outgoing row-block stage
+    vout_ref,  # VMEM scratch (bs_r, bn) panel_dtype outgoing row-block stage
     stage_sem,  # DMA semaphore: y0 stripe → panel[0]
     gather_sems,  # DMA semaphores (2,): panel → ybuf slots
     out_sem,  # DMA semaphore: vout → panel/output
@@ -273,7 +311,7 @@ def _tiled_kernel(
     # the next layer's panel slot (waited: layer l+1 may read ANY block).
     vout_ref[...] = jnp.maximum(
         acc_ref[...] + bias_ref[0].astype(jnp.float32), 0.0
-    )
+    ).astype(vout_ref.dtype)
     cp = pltpu.make_async_copy(
         vout_ref,
         panel_ref.at[1 - src, pl.ds(i * bs_r, bs_r), :],
@@ -298,9 +336,10 @@ def fused_mlp_tiled_forward(
     stacked_b: Array,
     y0: Array,
     *,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
     out_dtype=None,
+    panel_dtype=None,
 ) -> Array:
     """Y[L] = relu-MLP(y0), ONE ``pallas_call``, panel tiled over m.
 
@@ -332,6 +371,7 @@ def fused_mlp_tiled_forward(
     assert n % block_n == 0, (n, block_n)
     assert stacked_b.shape == (n_layers, m), stacked_b.shape
     out_dtype = out_dtype or jnp.result_type(stacked_w.dtype, y0.dtype)
+    pdt = _panel_np_dtype(panel_dtype)
 
     kernel = functools.partial(
         _tiled_kernel,
@@ -357,10 +397,10 @@ def fused_mlp_tiled_forward(
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         scratch_shapes=[
-            pltpu.ANY((2, m, block_n), jnp.float32),
-            pltpu.VMEM((2, bs_c, block_n), jnp.float32),
+            pltpu.ANY((2, m, block_n), pdt),
+            pltpu.VMEM((2, bs_c, block_n), pdt),
             pltpu.VMEM((bs_r, block_n), jnp.float32),
-            pltpu.VMEM((bs_r, block_n), jnp.float32),
+            pltpu.VMEM((bs_r, block_n), pdt),
             pltpu.SemaphoreType.DMA,
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
@@ -369,7 +409,7 @@ def fused_mlp_tiled_forward(
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, n), pdt),
         compiler_params=_compat.CompilerParams(
             # The HBM panel scratch is shared across ALL grid steps —
             # even the j stripes must run sequentially on one core.
@@ -380,7 +420,7 @@ def fused_mlp_tiled_forward(
         stacked_w.col_idx,
         stacked_w.block_mask.astype(jnp.int32),
         stacked_w.blocks,
-        y0.astype(jnp.float32),
+        y0.astype(pdt),
         stacked_b[:, :, None],
     )
     return out.astype(out_dtype)

@@ -29,7 +29,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import DEFAULT_BLOCK_N
 from repro.kernels import autodiff as _ad
 from repro.kernels import bcsr_spmm as _bcsr
 from repro.kernels import bsr_spmm as _bsr
@@ -81,9 +83,9 @@ def semiring_matmul(
     *,
     semiring_name: str = "plus_times",
     fuse_bias_relu: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: int = DEFAULT_BLOCK_N,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
 ) -> Array:
     """Padded, jit'd ``C = A ⊕.⊗ B`` (+ optional fused bias/ReLU)."""
@@ -91,7 +93,7 @@ def semiring_matmul(
     m, k = a.shape
     n = b.shape[1]
     block_m = min(block_m, _ceil_mult(m))
-    block_n = min(block_n, _ceil_mult(n))
+    block_n = effective_block_n(n, block_n)
     block_k = min(block_k, _ceil_mult(k))
     sr_zero = _semiring_zero(semiring_name)
     ap = _pad_to(_pad_to(a, 0, block_m), 1, block_k, fill=sr_zero)
@@ -117,11 +119,25 @@ def semiring_matmul(
 
 
 def _ceil_mult(size: int, base: int = 8) -> int:
-    """Largest power-of-two block ≤ 128 that keeps padding small."""
-    b = 128
+    """Largest power-of-two block ≤ DEFAULT_BLOCK_N that keeps padding small."""
+    b = DEFAULT_BLOCK_N
     while b > base and size < b:
         b //= 2
     return b
+
+
+def effective_block_n(n: int, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """The column-tile width a wrapper actually runs for an (·, n) panel:
+    the requested tile shrunk to the largest power-of-two that keeps the
+    pad small — EXACTLY the clamp every wrapper below applies, exposed so
+    the cost model (``repro.plan.cost``) and the autotuner
+    (``repro.tune``) bill the same grid the kernels execute."""
+    return min(block_n, _ceil_mult(n))
+
+
+def _panel_dtype_name(panel_dtype) -> str | None:
+    """Canonical (hashable) panel-dtype name for the static jit config."""
+    return None if panel_dtype is None else str(np.dtype(panel_dtype))
 
 
 @functools.partial(
@@ -135,7 +151,7 @@ def bsr_spmm(
     *,
     semiring_name: str = "plus_times",
     fuse_bias_relu: bool = False,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
 ) -> Array:
     """Padded, jit'd block-sparse ``C = A ⊕.⊗ B`` (+ fused epilogue).
@@ -145,7 +161,7 @@ def bsr_spmm(
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = b.shape[1]
-    block_n = min(block_n, _ceil_mult(n))
+    block_n = effective_block_n(n, block_n)
     bp = _pad_to(b, 1, block_n)
     if fuse_bias_relu and bias is None:
         raise ValueError("fuse_bias_relu requires bias")
@@ -178,7 +194,7 @@ def bcsr_spmm(
     *,
     semiring_name: str = "plus_times",
     fuse_bias_relu: bool = False,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
 ) -> Array:
     """Padded, jit'd occupancy-exact block-CSR ``C = A ⊕.⊗ B``.
@@ -196,7 +212,7 @@ def bcsr_spmm(
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = b.shape[1]
-    block_n = min(block_n, _ceil_mult(n))
+    block_n = effective_block_n(n, block_n)
     bp = _pad_to(b, 1, block_n)
     if fuse_bias_relu and bias is None:
         raise ValueError("fuse_bias_relu requires bias")
@@ -226,20 +242,25 @@ def bcsr_spmm(
     return jnp.where(row_empty[:, None], fill[:, None], out)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "panel_dtype")
+)
 def fused_mlp_forward(
     stacked_w: BlockSparseMatrix,
     stacked_b: Array,
     y0: Array,
     *,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
+    panel_dtype=None,
 ) -> Array:
     """Padded, jit'd VMEM-resident L-layer forward — ONE pallas_call.
 
     ``stacked_w``: BlockSparseMatrix whose leaves carry a leading L axis
     (see ``repro.core.dnn.stack_bsr``); square layers only. The
     activation panel never round-trips to HBM between layers.
+    ``panel_dtype=jnp.bfloat16`` halves the resident panel's VMEM bill
+    (f32 accumulate, result cast back — see ``kernels.fused_mlp``).
 
     NOT differentiable (per-layer activations never leave VMEM, so there
     is nothing to checkpoint): ``jax.grad`` through this raises with a
@@ -247,21 +268,24 @@ def fused_mlp_forward(
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = y0.shape[1]
-    block_n = min(block_n, _ceil_mult(n))
+    block_n = effective_block_n(n, block_n)
     yp = _pad_to(y0, 1, block_n)
-    cfg = _ad.FusedMlpConfig(block_n, interpret)
+    cfg = _ad.FusedMlpConfig(block_n, interpret, _panel_dtype_name(panel_dtype))
     out = _ad.fused_mlp_forward_nondiff(cfg, stacked_w, stacked_b, yp)
     return out[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "panel_dtype")
+)
 def fused_mlp_tiled_forward(
     stacked_w: BlockSparseMatrix,
     stacked_b: Array,
     y0: Array,
     *,
-    block_n: int = 128,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool | None = None,
+    panel_dtype=None,
 ) -> Array:
     """Padded, jit'd multi-panel tiled L-layer forward — ONE pallas_call.
 
@@ -269,12 +293,13 @@ def fused_mlp_tiled_forward(
     exceeds ``VMEM_SOFT_LIMIT_BYTES``: the ping-pong panel lives in HBM
     scratch and the m dimension is tiled over the row-block grid
     (``repro.kernels.fused_mlp.fused_mlp_tiled_forward``). Same
-    forward-only contract as ``fused_mlp_forward``.
+    forward-only contract as ``fused_mlp_forward``, including bf16
+    activation panels via ``panel_dtype``.
     """
     interpret = auto_interpret() if interpret is None else interpret
     n = y0.shape[1]
-    block_n = min(block_n, _ceil_mult(n))
+    block_n = effective_block_n(n, block_n)
     yp = _pad_to(y0, 1, block_n)
-    cfg = _ad.FusedMlpConfig(block_n, interpret)
+    cfg = _ad.FusedMlpConfig(block_n, interpret, _panel_dtype_name(panel_dtype))
     out = _ad.fused_mlp_tiled_forward_nondiff(cfg, stacked_w, stacked_b, yp)
     return out[:, :n].astype(jnp.result_type(stacked_w.dtype, y0.dtype))

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import _compat
+from repro.kernels import DEFAULT_BLOCK_N, _compat
 
 Array = jax.Array
 
@@ -105,9 +105,9 @@ def semiring_matmul(
     semiring_name: str = "plus_times",
     bias: Array | None = None,
     fuse_bias_relu: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: int = DEFAULT_BLOCK_N,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
     out_dtype=None,
 ) -> Array:

@@ -16,7 +16,12 @@ from repro.plan.cache import (  # noqa: F401
     default_cache,
     reset_default_cache,
 )
-from repro.plan.cost import layer_grid_steps, stack_grid_steps  # noqa: F401
+from repro.plan.cost import (  # noqa: F401
+    layer_block_area,
+    layer_grid_steps,
+    stack_block_work,
+    stack_grid_steps,
+)
 from repro.plan.degrade import (  # noqa: F401
     LEVEL_LAYERED,
     LEVEL_RESIDENT,
@@ -79,8 +84,10 @@ __all__ = [
     "build_sharded_plan",
     "default_cache",
     "fused_route",
+    "layer_block_area",
     "layer_grid_steps",
     "layer_layout",
+    "stack_block_work",
     "layer_path",
     "mesh_fingerprint",
     "preferred_layout",

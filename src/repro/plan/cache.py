@@ -75,6 +75,7 @@ class PlanCache:
         relayout: bool | None = None,
         fingerprint: str | None = None,
         mesh=None,
+        tuned=None,
     ) -> StackPlan:
         """The plan for this (stack, width, differentiable?, mesh) —
         cached.
@@ -84,14 +85,27 @@ class PlanCache:
         construction). ``mesh`` routes to a mesh-sharded
         :class:`repro.plan.ShardedStackPlan`; its fingerprint lands in
         the :class:`PlanKey`, so a sharded and an unsharded plan for the
-        same topology never collide.
+        same topology never collide. ``tuned`` (a
+        ``repro.tune.TunedConfig``) keys the entry by its ``token()``,
+        so a tuned and an untuned plan for the same topology never
+        collide either; the sharded builder takes no tuning knobs, so
+        mesh + tuned together is an error.
         """
         weights = tuple(weights)
         biases = tuple(biases)
+        if mesh is not None and tuned is not None:
+            raise ValueError(
+                "tuned configs apply to single-device plans only; "
+                "pass tuned=None with a mesh"
+            )
         if fingerprint is None:
             fingerprint = topology_fingerprint(weights)
         mesh_fp = None if mesh is None else _sharded.mesh_fingerprint(mesh)
-        key = PlanKey(fingerprint, width, differentiable, use_resident, mesh_fp)
+        tuned_token = None if tuned is None else tuned.token()
+        key = PlanKey(
+            fingerprint, width, differentiable, use_resident, mesh_fp,
+            tuned=tuned_token,
+        )
         self.lookups += 1
         plan = self._entries.get(key)
         if (
@@ -116,6 +130,7 @@ class PlanCache:
                 and cand.differentiable == differentiable
                 and cand.key.resident == use_resident
                 and cand.key.mesh == mesh_fp
+                and cand.key.tuned == tuned_token
                 and len(cand.source_weights) == len(weights)
                 and all(
                     a is b for a, b in zip(cand.source_weights, weights)
@@ -145,6 +160,7 @@ class PlanCache:
                 relayout=relayout,
                 fingerprint=fingerprint,
                 donor=donor,
+                tuned=tuned,
             )
         self.builds += 1
         self._entries[key] = plan

@@ -58,10 +58,16 @@ class DegradationLadder:
     propagates, because there is nothing left to degrade to.
     """
 
-    def __init__(self, cache, *, mesh=None, use_resident: bool = False):
+    def __init__(
+        self, cache, *, mesh=None, use_resident: bool = False, tuned=None
+    ):
         self.cache = cache
         self.mesh = mesh
         self.use_resident = bool(use_resident)
+        # Tuned kernel config (repro.tune.TunedConfig) applied at the
+        # single-device levels; the sharded builder takes no tuning
+        # knobs, so a sharded lookup always passes tuned=None.
+        self.tuned = tuned
         self._healthy = {LEVEL_SHARDED: True, LEVEL_RESIDENT: True}
         self.events: list[DegradeEvent] = []
 
@@ -139,6 +145,7 @@ class DegradationLadder:
                     use_resident=level == LEVEL_RESIDENT,
                     fingerprint=fingerprint,
                     mesh=self.mesh if level == LEVEL_SHARDED else None,
+                    tuned=self.tuned if level != LEVEL_SHARDED else None,
                 )
                 return plan, level, self.cache.hits > before
             except Exception as e:  # noqa: BLE001 — any build/compile fault

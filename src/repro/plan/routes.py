@@ -31,6 +31,7 @@ from __future__ import annotations
 
 from typing import Sequence
 
+from repro.kernels import DEFAULT_BLOCK_N
 from repro.plan.layout import Weight, layer_layout
 from repro.sparse.bsr import BlockSparseMatrix
 
@@ -64,34 +65,49 @@ def _homogeneous_bsr_stack(weights: Sequence[Weight]) -> bool:
 
 
 def resident_eligible(
-    weights: Sequence[Weight], *, block_n: int = 128
+    weights: Sequence[Weight],
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    panel_dtype=None,
+    vmem_limit: int | None = None,
 ) -> bool:
     """Can this stack run through the single-call VMEM-resident kernel?
 
     Requires: a homogeneous square BSR stack whose activation panel (at
-    this ``block_n``) fits the VMEM budget. Stacks past the budget are
-    NOT resident-eligible but may still be ``fused-tiled``-eligible —
-    :func:`fused_route` makes the three-way call.
+    this ``block_n`` and ``panel_dtype``) fits the VMEM budget. Stacks
+    past the budget are NOT resident-eligible but may still be
+    ``fused-tiled``-eligible — :func:`fused_route` makes the three-way
+    call. bf16 panels halve the panel bill, so the same stack can be
+    resident under ``panel_dtype="bfloat16"`` and tiled under f32.
     """
     from repro.kernels import fused_mlp as _fmlp
 
     if not _homogeneous_bsr_stack(weights):
         return False
-    return _fmlp.fused_mlp_eligible(weights[0], block_n)
+    return _fmlp.fused_mlp_eligible(
+        weights[0], block_n, panel_dtype=panel_dtype, vmem_limit=vmem_limit
+    )
 
 
 def fused_route(
-    weights: Sequence[Weight], *, block_n: int = 128
+    weights: Sequence[Weight],
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    panel_dtype=None,
+    vmem_limit: int | None = None,
 ) -> str | None:
     """Which single-``pallas_call`` fused route (if any) fits this stack.
 
     ``ROUTE_FUSED`` when the activation panel fits VMEM
     (:func:`resident_eligible`), ``ROUTE_FUSED_TILED`` for a homogeneous
-    square BSR stack past ``VMEM_SOFT_LIMIT_BYTES`` (panel ping-pongs
-    through HBM scratch, m tiled over the row-block grid), ``None`` when
-    only the per-layer routes apply. The boundary is exact:
-    ``fused_mlp_vmem_bytes(m, block_n) == VMEM_SOFT_LIMIT_BYTES`` is the
-    last resident m; one block-row more tips into fused-tiled.
+    square BSR stack past the VMEM budget (panel ping-pongs through HBM
+    scratch, m tiled over the row-block grid), ``None`` when only the
+    per-layer routes apply. The boundary is exact:
+    ``fused_mlp_vmem_bytes(m, block_n, panel_dtype) == vmem_limit``
+    (default ``VMEM_SOFT_LIMIT_BYTES``) is the last resident m; one
+    block-row more tips into fused-tiled. The autotuner moves this
+    boundary through ``panel_dtype`` (bf16 halves the bill) and
+    ``vmem_limit`` (silicon-calibrated budget).
     """
     from repro.kernels import fused_mlp as _fmlp
 
@@ -100,7 +116,9 @@ def fused_route(
     first = weights[0]
     if not _fmlp.fused_mlp_tiled_eligible(first, block_n):  # square check
         return None
-    if _fmlp.fused_mlp_eligible(first, block_n):
+    if _fmlp.fused_mlp_eligible(
+        first, block_n, panel_dtype=panel_dtype, vmem_limit=vmem_limit
+    ):
         return ROUTE_FUSED
     return ROUTE_FUSED_TILED
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import DEFAULT_BLOCK_N
 from repro.plan import cost as _cost
 from repro.plan import layout as _layout
 from repro.plan import routes as _routes
@@ -96,13 +97,19 @@ class PlanKey(NamedTuple):
     ``mesh`` is the mesh/shard fingerprint
     (:func:`repro.plan.sharded.mesh_fingerprint`) for sharded plans and
     ``None`` for single-device plans — a sharded and an unsharded plan
-    for the same topology can NEVER collide in a cache."""
+    for the same topology can NEVER collide in a cache.
+
+    ``tuned`` is the :meth:`repro.tune.TunedConfig.token` of the tuning
+    entry the plan was built under, or ``None`` for plans built on the
+    hand-picked defaults — so a tuned and an untuned plan for the same
+    topology can never collide either."""
 
     fingerprint: str
     width: int
     differentiable: bool
     resident: bool | None  # the use_resident tri-state the caller asked
     mesh: str | None = None  # mesh/shard fingerprint, None = unsharded
+    tuned: str | None = None  # TunedConfig token, None = default constants
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +146,7 @@ class StackPlan:
     biases: tuple
     source_weights: tuple  # caller's objects — cache identity check
     source_biases: tuple
+    tuned: object | None = None  # the TunedConfig the plan was built under
     _stacked: tuple | None = None  # (stacked_w, stacked_b) for fused
     _fn: Callable | None = None
     _compiles: int = 0
@@ -192,6 +200,7 @@ class StackPlan:
             ),
             "compiles": self.compile_count,
             "calls": self.calls,
+            "tuned": self.key.tuned,
         }
 
     # ------------------------------------------------------------------
@@ -257,11 +266,17 @@ def _make_executable(plan: StackPlan) -> Callable:
     from repro.kernels import ops as kernel_ops
     from repro.sparse import ops as sparse_ops
 
+    # Tuned plans thread their overrides into every kernel call; untuned
+    # plans pass nothing so the wrappers run on the hand-picked defaults.
+    block_n = _tuned_attr(plan.tuned, "block_n") or DEFAULT_BLOCK_N
+    panel_dtype = _tuned_attr(plan.tuned, "panel_dtype")
+    fused_kw = {"block_n": block_n, "panel_dtype": panel_dtype}
+
     if plan.route == _routes.ROUTE_FUSED:
 
         def run_fused(stacked_w, stacked_b, y):
             plan._compiles += 1
-            return kernel_ops.fused_mlp_forward(stacked_w, stacked_b, y)
+            return kernel_ops.fused_mlp_forward(stacked_w, stacked_b, y, **fused_kw)
 
         return jax.jit(run_fused)
 
@@ -269,7 +284,9 @@ def _make_executable(plan: StackPlan) -> Callable:
 
         def run_fused_tiled(stacked_w, stacked_b, y):
             plan._compiles += 1
-            return kernel_ops.fused_mlp_tiled_forward(stacked_w, stacked_b, y)
+            return kernel_ops.fused_mlp_tiled_forward(
+                stacked_w, stacked_b, y, **fused_kw
+            )
 
         return jax.jit(run_fused_tiled)
 
@@ -280,16 +297,52 @@ def _make_executable(plan: StackPlan) -> Callable:
         plan._compiles += 1
         for path, tp, w, b in zip(paths, tps, weights, biases):
             if path == "kernel-bcsr":
-                y = kernel_ops.bcsr_spmm(w, y, b, tp, fuse_bias_relu=True)
+                y = kernel_ops.bcsr_spmm(
+                    w, y, b, tp, fuse_bias_relu=True, block_n=block_n
+                )
             elif path == "kernel-ell":
-                y = kernel_ops.bsr_spmm(w, y, b, fuse_bias_relu=True)
+                y = kernel_ops.bsr_spmm(
+                    w, y, b, fuse_bias_relu=True, block_n=block_n
+                )
             elif path == "kernel-dense":
-                y = kernel_ops.semiring_matmul(w, y, b, fuse_bias_relu=True)
+                y = kernel_ops.semiring_matmul(
+                    w, y, b, fuse_bias_relu=True, block_n=block_n
+                )
             else:  # xla-dense: grad-compatible fused XLA form
                 y = sparse_ops.dense_matmul_fused_relu(w, y, b)
         return y
 
     return jax.jit(run_layered)
+
+
+def _tuned_attr(tuned, name: str):
+    """Read one knob off a TunedConfig-shaped object (duck-typed so the
+    plan layer never imports ``repro.tune``); None when untuned."""
+    return None if tuned is None else getattr(tuned, name, None)
+
+
+def _reblock(w: Weight, block_size: int) -> Weight:
+    """Re-block a sparse execution weight through its dense form (host-
+    side, plan-build-time only). Keeps the execution layout family."""
+    if isinstance(w, BlockCSRMatrix):
+        return BlockCSRMatrix.from_dense(
+            np.asarray(jax.device_get(w.to_dense())), (block_size, block_size)
+        )
+    if isinstance(w, BlockSparseMatrix):
+        return BlockSparseMatrix.from_dense(
+            np.asarray(jax.device_get(w.to_dense())), (block_size, block_size)
+        )
+    return w
+
+
+def _force_layout(w: Weight, layout: str) -> Weight:
+    """Tuner override of the ELL-waste heuristic: force the execution
+    layout of a sparse weight (identity for dense weights)."""
+    if layout == "bcsr" and isinstance(w, BlockSparseMatrix):
+        return BlockCSRMatrix.from_bsr(w)
+    if layout == "ell" and isinstance(w, BlockCSRMatrix):
+        return w.to_bsr()
+    return w
 
 
 def build_plan(
@@ -302,6 +355,7 @@ def build_plan(
     relayout: bool | None = None,
     fingerprint: str | None = None,
     donor: "StackPlan | None" = None,
+    tuned=None,
 ) -> StackPlan:
     """Compile one :class:`StackPlan` (all the per-topology analysis).
 
@@ -320,6 +374,15 @@ def build_plan(
     sorted exactly once no matter how many width classes serve it), and
     the fused weight stack — are shared by reference.
     ``PlanCache.get`` supplies this automatically.
+
+    ``tuned``: a :class:`repro.tune.TunedConfig` (duck-typed — the plan
+    layer only reads its fields) consulted BEFORE the hand-picked
+    defaults: ``block_n`` feeds every kernel call and the grid bill,
+    ``panel_dtype``/``vmem_limit_bytes`` move the resident↔tiled
+    boundary, ``layout`` overrides the ELL-waste heuristic, and
+    ``block_size`` re-blocks layered execution weights. The config's
+    token lands in :attr:`PlanKey.tuned` so tuned and untuned plans
+    never collide in a :class:`~repro.plan.PlanCache`.
     """
     weights = tuple(weights)
     biases = tuple(biases)
@@ -330,11 +393,25 @@ def build_plan(
     if fingerprint is None:
         fingerprint = topology_fingerprint(weights)
 
+    tuned_token = None if tuned is None else tuned.token()
+    t_block_n = _tuned_attr(tuned, "block_n") or DEFAULT_BLOCK_N
+    t_panel = _tuned_attr(tuned, "panel_dtype")
+    t_vmem = _tuned_attr(tuned, "vmem_limit_bytes")
+    t_layout = _tuned_attr(tuned, "layout")
+    t_block_size = _tuned_attr(tuned, "block_size")
+
     # fused_ok: which single-pallas_call route structurally fits —
     # ROUTE_FUSED (panel resident in VMEM), ROUTE_FUSED_TILED (panel
     # past the VMEM budget, ping-ponged through HBM scratch), or None.
     fused_ok = (
-        None if differentiable else _routes.fused_route(weights)
+        None
+        if differentiable
+        else _routes.fused_route(
+            weights,
+            block_n=t_block_n,
+            panel_dtype=t_panel,
+            vmem_limit=t_vmem,
+        )
     )
     if use_resident and fused_ok is None:
         raise ValueError(
@@ -364,17 +441,21 @@ def build_plan(
             donor.key.fingerprint != fingerprint
             or donor.differentiable != differentiable
             or donor.key.resident != use_resident
+            or donor.key.tuned != tuned_token
             or donor.n_layers != len(weights)
         ):
             raise ValueError(
                 "donor plan does not match this stack's plan key "
-                "(fingerprint / differentiable / residency / layers)"
+                "(fingerprint / differentiable / residency / tuned / layers)"
             )
         route = donor.route
         exec_weights = list(donor.weights)
         layer_plans = [
             dataclasses.replace(
-                lp, grid_steps=_cost.layer_grid_steps(ew, width)
+                lp,
+                grid_steps=_cost.layer_grid_steps(
+                    ew, width, block_n=t_block_n
+                ),
             )
             for lp, ew in zip(donor.layers, exec_weights)
         ]
@@ -389,7 +470,14 @@ def build_plan(
             src_layout = _layout.layer_layout(w)
             ew = w
             if not fused_family and relayout:
-                ew = _layout.to_preferred_layout(w)
+                if t_layout is not None:
+                    ew = _force_layout(w, t_layout)
+                else:
+                    ew = _layout.to_preferred_layout(w)
+                if t_block_size is not None:
+                    bs = getattr(ew, "block_shape", (t_block_size,))[0]
+                    if bs != t_block_size:
+                        ew = _reblock(ew, t_block_size)
             exec_layout = _layout.layer_layout(ew)
             path = (
                 route
@@ -409,7 +497,9 @@ def build_plan(
                     source_layout=src_layout,
                     layout=exec_layout,
                     path=path,
-                    grid_steps=_cost.layer_grid_steps(ew, width),
+                    grid_steps=_cost.layer_grid_steps(
+                        ew, width, block_n=t_block_n
+                    ),
                     transpose_plan=tp,
                 )
             )
@@ -419,7 +509,9 @@ def build_plan(
             route = _routes.ROUTE_XLA
 
     plan = StackPlan(
-        key=PlanKey(fingerprint, width, differentiable, use_resident),
+        key=PlanKey(
+            fingerprint, width, differentiable, use_resident, tuned=tuned_token
+        ),
         route=route,
         layers=tuple(layer_plans),
         width=width,
@@ -429,6 +521,7 @@ def build_plan(
         biases=biases,
         source_weights=weights,
         source_biases=biases,
+        tuned=tuned,
     )
     if plan.is_fused_route:
         if donor is not None:

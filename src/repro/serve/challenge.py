@@ -76,6 +76,8 @@ def run_challenge(
     engine: SparseDNNEngine | None = None,
     warmup: bool = True,
     block_size: int = 16,
+    tuning_table: Any = None,
+    panel_dtype: Any = None,
 ) -> ChallengeResult:
     """Stream ``n_inputs`` seeded inputs through the engine, panelwise.
 
@@ -85,6 +87,9 @@ def run_challenge(
     .radixnet_weights` with the given ``mesh``/``use_resident``.
     ``warmup`` runs one untimed panel of the same width class first so
     the metric bills steady-state serving, not plan compilation.
+    ``tuning_table``/``panel_dtype`` thread straight into the default
+    engine (``repro.tune``): a table hit on this spec's fingerprint —
+    or an explicit bf16-panel override — retunes every panel's plan.
     """
     if engine is None:
         weights, biases = rx.radixnet_weights(spec, block_size=block_size)
@@ -94,6 +99,8 @@ def run_challenge(
             batch_align=batch_align,
             mesh=mesh,
             use_resident=use_resident,
+            tuning_table=tuning_table,
+            panel_dtype=panel_dtype,
         )
     panel = jnp.asarray(
         rx.radixnet_input_panel(

@@ -171,6 +171,16 @@ class SparseDNNEngine:
     # backoff-heavy faulted trace neither stalls CI nor depends on
     # runner load.
     clock: Any = None
+    # Kernel autotuning (docs/tuning.md). ``tuning_table``: a
+    # repro.tune.TuningTable consulted ONCE at construction by this
+    # stack's topology fingerprint — a hit threads the tuned config
+    # (block_n, forced layout, bf16 panels, VMEM budget) through every
+    # plan this engine builds; a miss serves defaults, silently.
+    # ``panel_dtype``: explicit bf16-panel override (e.g. "bfloat16"),
+    # applied on top of any table hit. The sharded level always serves
+    # untuned (the sharded builder takes no tuning knobs).
+    tuning_table: Any = None
+    panel_dtype: Any = None
 
     def __post_init__(self):
         self.n_layers = len(self.weights)
@@ -192,13 +202,44 @@ class SparseDNNEngine:
             )
         from repro.plan import routes as _routes
 
+        # Fingerprint once — weights are immutable across requests; the
+        # hot path must not re-hash the topology per step. Computed
+        # before residency so the tuning-table lookup (keyed by this
+        # fingerprint) can shift the resident boundary below.
+        self._fingerprint = topology_fingerprint(tuple(self.weights))
+        self._tuned = None
+        if self.tuning_table is not None:
+            dtype = str(
+                np.dtype(getattr(self.weights[0], "dtype", np.float32))
+            )
+            self._tuned = self.tuning_table.lookup(
+                self._fingerprint, dtype=dtype
+            )
+        if self.panel_dtype is not None:
+            from repro.tune.table import TunedConfig
+
+            pdt = str(np.dtype(self.panel_dtype))
+            if self._tuned is None:
+                self._tuned = TunedConfig(panel_dtype=pdt)
+            else:
+                self._tuned = dataclasses.replace(
+                    self._tuned, panel_dtype=pdt
+                )
         # Fused-family eligibility covers both the VMEM-resident kernel
         # and the multi-panel tiled variant (panel past the VMEM budget)
         # — either way the plan layer serves ONE pallas_call per step.
+        # Tuned knobs move the boundary: bf16 panels halve the VMEM
+        # bill, so a stack that tiles under f32 can serve resident.
+        fused_kw: dict = {}
+        if self._tuned is not None:
+            if self._tuned.block_n is not None:
+                fused_kw["block_n"] = self._tuned.block_n
+            fused_kw["panel_dtype"] = self._tuned.panel_dtype
+            fused_kw["vmem_limit"] = self._tuned.vmem_limit_bytes
         resident_ok = (
             not self.differentiable
             and self.mesh is None
-            and _routes.fused_route(self.weights) is not None
+            and _routes.fused_route(self.weights, **fused_kw) is not None
         )
         if self.use_resident and not resident_ok:
             raise ValueError(
@@ -215,13 +256,13 @@ class SparseDNNEngine:
                     w.validate(name=f"SparseDNNEngine layer {i} weight")
         if self.plan_cache is None:
             self.plan_cache = PlanCache(max_size=16)
-        # Fingerprint once — weights are immutable across requests; the
-        # hot path must not re-hash the topology per step.
-        self._fingerprint = topology_fingerprint(tuple(self.weights))
         # The degradation ladder owns execution-level health: sharded →
         # single-device → layered fallback for the same fingerprint.
         self._ladder = DegradationLadder(
-            self.plan_cache, mesh=self.mesh, use_resident=self._resident
+            self.plan_cache,
+            mesh=self.mesh,
+            use_resident=self._resident,
+            tuned=self._tuned,
         )
         self._served = 0
         self._steps = 0
@@ -238,6 +279,12 @@ class SparseDNNEngine:
     def ladder(self) -> DegradationLadder:
         """The engine's degradation ladder (health marks, events)."""
         return self._ladder
+
+    @property
+    def tuned(self):
+        """The resolved tuned config this engine serves with (None =
+        defaults; see ``repro.tune``)."""
+        return self._tuned
 
     def _plan_for_width(self, width: int, *, step: int = -1, compile_hook=None):
         """(plan, level, cache_hit) serving a ``width``-wide panel at
@@ -446,6 +493,7 @@ class SparseDNNEngine:
             "compiles": plan.compile_count,
             "level": level,
             "degraded": level != self._ladder.preferred_level,
+            "tuned": plan.key.tuned,
         }
         if getattr(plan, "is_sharded", False):
             # Per-shard accounting: each shard's bill is its local

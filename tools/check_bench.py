@@ -89,6 +89,7 @@ PARAMS = {
         "density",
         "seed",
     ),
+    "tune": ("params",),
     "fleet": (
         "m",
         "layers",
@@ -213,6 +214,30 @@ CHALLENGE_EXACT = (
     "grid_steps",
     "n_categories",
     "reference_match",
+)
+# Tune arm (autotuner sweep): winners, routes, and the cost-model bills
+# are pure functions of the generator params — checked exactly; probe
+# numerics (max-abs-err floats) and wall-clocks ride on the runner and
+# are gated via headline invariants / the time tolerance instead.
+TUNE_SKEWED_EXACT = (
+    "winner",
+    "route_tuned",
+    "route_default",
+    "grid_steps_tuned",
+    "grid_steps_default",
+    "block_work_tuned",
+    "block_work_default",
+    "accuracy_ok",
+)
+TUNE_RADIX_EXACT = (
+    "winner",
+    "route_default",
+    "route_tuned",
+    "grid_steps_default",
+    "grid_steps_tuned",
+    "vmem_bytes_f32",
+    "vmem_bytes_bf16",
+    "vmem_soft_limit",
 )
 # Fleet arm (replicated serving on a virtual clock): every curve point
 # is a pure function of the generator config — latencies, miss rates,
@@ -525,6 +550,71 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
         wt_b, wt_f = bs.get("wall_time_s"), fs.get("wall_time_s")
         if wt_b is not None and wt_f is not None:
             gate.time("challenge", "wall_time_s", wt_b, wt_f)
+
+    # --- tune: sweep accounting exact, headline wins gated ------------
+    pair = _section_pair(gate, "tune", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for sub, fields in (
+            ("skewed", TUNE_SKEWED_EXACT),
+            ("radix", TUNE_RADIX_EXACT),
+        ):
+            bsub, fsub = bs.get(sub, {}), fs.get(sub, {})
+            for field in fields:
+                if field not in bsub:
+                    gate.skip("tune", f"{sub}.{field} absent from baseline")
+                    continue
+                if field not in fsub:
+                    gate.missing("tune", f"{sub}.{field}")
+                    continue
+                gate.exact("tune", f"{sub}.{field}", bsub[field], fsub[field])
+        # headline invariants, gated regardless of baseline drift: the
+        # tuned config must STRICTLY beat the default's grid-step bill
+        # on the skewed stack, bf16 panels must move the RadiX-net
+        # stack across the resident boundary, and the bf16 numerics
+        # must hold on the challenge-shaped probe.
+        sk, rad = fs.get("skewed", {}), fs.get("radix", {})
+        won = (
+            sk.get("grid_steps_tuned", 1 << 62)
+            < sk.get("grid_steps_default", 0)
+        )
+        gate._add(
+            "tune",
+            "skewed.tuned_beats_default_steps",
+            True,
+            won,
+            "ok" if won else "FAIL",
+        )
+        moved = (
+            rad.get("route_default") == "fused-tiled"
+            and rad.get("route_tuned") == "fused"
+        )
+        gate._add(
+            "tune",
+            "radix.bf16_moves_resident_boundary",
+            True,
+            moved,
+            "ok" if moved else "FAIL",
+        )
+        err = rad.get("bf16_max_abs_err")
+        err_ok = err is not None and err <= 0.05
+        gate._add(
+            "tune",
+            "radix.bf16_max_abs_err<=0.05",
+            True,
+            err_ok,
+            "ok" if err_ok else "FAIL",
+        )
+        for sub, field in (
+            ("skewed", "wall_s_tuned"),
+            ("skewed", "wall_s_default"),
+            ("radix", "wall_s_f32_tiled"),
+            ("radix", "wall_s_bf16_tiled"),
+        ):
+            wt_b = bs.get(sub, {}).get(field)
+            wt_f = fs.get(sub, {}).get(field)
+            if wt_b is not None and wt_f is not None:
+                gate.time("tune", f"{sub}.{field}", wt_b, wt_f)
 
     # --- fleet: replicated-serving curves exact, headlines gated ------
     pair = _section_pair(gate, "fleet", baseline, fresh)

@@ -32,15 +32,20 @@ FENCED_DOCS = [
     "docs/architecture.md",
     "docs/robustness.md",
     "docs/serving.md",
+    "docs/tuning.md",
 ]
 
 # Example scripts with a fast deterministic mode, run by the CI docs job
 # (script path relative to the repo root, plus its quick-mode args).
 # The --shards run exercises the mesh-sharded serving path on 2 fake
-# host devices (the flag sets XLA_FLAGS before the jax import).
+# host devices (the flag sets XLA_FLAGS before the jax import); the
+# --tuned run serves through the committed autotuner table
+# (examples/tuning_table.json) and asserts the tuned plan bills no
+# more grid steps than the default.
 QUICK_EXAMPLES = [
     ("examples/serve_stream.py", ["--quick"]),
     ("examples/serve_stream.py", ["--quick", "--shards", "2"]),
+    ("examples/serve_stream.py", ["--quick", "--tuned"]),
 ]
 
 
