@@ -5,10 +5,14 @@ Implements the operations the paper's Fig. 4 C code uses — ``mxm``,
 (``mxv``/``vxm``, ``apply``, ``reduce``, ``select``, ``extract``,
 ``assign``, ``transpose``) with GraphBLAS-style masks and accumulators.
 
-Dense arrays and :class:`repro.sparse.bsr.BlockSparseMatrix` operands are
-both accepted where meaningful; sparse × dense products dispatch to the
-BSR path (jnp oracle here; the Pallas kernel lives in
-``repro.kernels.bsr_spmm`` and is selected by ``repro.kernels.ops``).
+Dense arrays and :class:`repro.sparse.bsr.BlockSparseMatrix` /
+:class:`repro.sparse.bcsr.BlockCSRMatrix` operands are both accepted
+where meaningful. Sparse × dense products route through the Pallas
+kernels (``repro.kernels.ops``) via a cached, semiring-aware
+:class:`repro.plan.mxm.MxmPlan` — every registry semiring runs on the
+fast occupancy-exact path, with the grid bill read off the plan's cost
+model. ``use_kernel=False`` forces the pure-jnp XLA oracle
+(``repro.sparse.ops``) for A/B comparison and for non-f32 exotica.
 """
 
 from __future__ import annotations
@@ -27,7 +31,7 @@ MatrixLike = Union[Array, BlockSparseMatrix, BlockCSRMatrix]
 
 
 def _sparse_matmul_for(a: MatrixLike):
-    """The layout's semiring matmul, or None for dense operands."""
+    """The layout's XLA-oracle semiring matmul, or None for dense."""
     if isinstance(a, BlockCSRMatrix):
         from repro.sparse import ops as sparse_ops
 
@@ -37,6 +41,48 @@ def _sparse_matmul_for(a: MatrixLike):
 
         return sparse_ops.bsr_matmul
     return None
+
+
+def _sparse_product(
+    a: MatrixLike, b: Array, semiring: Semiring, use_kernel: Optional[bool]
+) -> Optional[Array]:
+    """Sparse × dense over any registry semiring, or None for dense ``a``.
+
+    Kernel route (default): a cached semiring-aware ``MxmPlan``
+    dispatches the Pallas kernel on the occupancy-optimal layout —
+    ``plus_times`` and ``min_plus`` plans live under different keys, so
+    they never collide. ``use_kernel=False`` pins the XLA oracle. The
+    boolean semirings come back in the kernels' {0, 1} f32 encoding
+    either way (the oracle's bool output is cast to match).
+    """
+    if not isinstance(a, (BlockSparseMatrix, BlockCSRMatrix)):
+        return None
+    if use_kernel is None:
+        # Plan building hashes the operand's concrete index arrays; under
+        # a jit trace the operand's leaves are tracers, so auto-routing
+        # falls back to the oracle (use_kernel=True still forces it).
+        traced = any(
+            isinstance(leaf, jax.core.Tracer)
+            for leaf in jax.tree_util.tree_leaves(a)
+        )
+        use_kernel = (
+            not traced and semiring.name in _kernel_semiring_names()
+        )
+    if use_kernel:
+        from repro.plan.mxm import mxm_plan
+
+        plan = mxm_plan(a, b.shape[1], semiring.name)
+        return plan(b)
+    out = _sparse_matmul_for(a)(a, b, semiring=semiring)
+    if out.dtype == jnp.bool_:
+        out = out.astype(jnp.float32)
+    return out
+
+
+def _kernel_semiring_names():
+    from repro.kernels.semirings import supported
+
+    return supported()
 
 
 def _apply_mask_and_accum(
@@ -64,16 +110,17 @@ def mxm(
     mask: Optional[Array] = None,
     accum: Optional[Callable[[Array, Array], Array]] = None,
     prev: Optional[Array] = None,
+    use_kernel: Optional[bool] = None,
 ) -> Array:
     """C = A ⊕.⊗ B  (GrB_mxm).
 
-    ``a`` may be dense or BSR; ``b`` is dense (the paper keeps Y dense,
-    §V-B: "we only consider dense Y matrices").
+    ``a`` may be dense, ELL-BSR, or block-CSR; ``b`` is dense (the paper
+    keeps Y dense, §V-B: "we only consider dense Y matrices"). Sparse
+    operands launch the Pallas kernel route by default (any registry
+    semiring); ``use_kernel=False`` forces the XLA oracle.
     """
-    matmul = _sparse_matmul_for(a)
-    if matmul is not None:
-        out = matmul(a, b, semiring=semiring)
-    else:
+    out = _sparse_product(a, b, semiring, use_kernel)
+    if out is None:
         out = semiring.matmul(a, b)
     return _apply_mask_and_accum(out, prev, mask, accum)
 
@@ -86,9 +133,15 @@ def mxv(
     mask: Optional[Array] = None,
     accum: Optional[Callable[[Array, Array], Array]] = None,
     prev: Optional[Array] = None,
+    use_kernel: Optional[bool] = None,
 ) -> Array:
-    """w = A ⊕.⊗ v (GrB_mxv)."""
-    out = mxm(a, v[:, None], semiring)[:, 0]
+    """w = A ⊕.⊗ v (GrB_mxv).
+
+    The vector rides as a width-1 panel; the kernel route's plan bills
+    the narrow panel at the effective 8-wide tile
+    (``repro.plan.cost.mxv_grid_steps``), not a full-width tile.
+    """
+    out = mxm(a, v[:, None], semiring, use_kernel=use_kernel)[:, 0]
     return _apply_mask_and_accum(out, prev, mask, accum)
 
 
@@ -100,11 +153,13 @@ def vxm(
     mask: Optional[Array] = None,
     accum: Optional[Callable[[Array, Array], Array]] = None,
     prev: Optional[Array] = None,
+    use_kernel: Optional[bool] = None,
 ) -> Array:
-    """wᵀ = vᵀ ⊕.⊗ A (GrB_vxm)."""
-    matmul = _sparse_matmul_for(a)
-    if matmul is not None:
-        out = matmul(a.transpose(), v[:, None], semiring=semiring)[:, 0]
+    """wᵀ = vᵀ ⊕.⊗ A (GrB_vxm) — Aᵀ ⊕.⊗ v on the same narrow-panel
+    kernel route as ``mxv`` for sparse operands."""
+    if isinstance(a, (BlockSparseMatrix, BlockCSRMatrix)):
+        out = _sparse_product(a.transpose(), v[:, None], semiring, use_kernel)
+        out = out[:, 0]
     else:
         out = semiring.vecmat(v, a)
     return _apply_mask_and_accum(out, prev, mask, accum)

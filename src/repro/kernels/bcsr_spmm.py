@@ -23,9 +23,12 @@ Block-rows with no stored blocks are never visited; the host wrapper
 (``repro.kernels.ops.bcsr_spmm``) fills them with the epilogue of the
 semiring zero, matching the oracle's masked semantics.
 
-Semirings: ``plus_times`` on the MXU; max/min-plus and max/min-min on
-the VPU via ``semiring_matmul._vpu_tile_product`` — same coverage as the
-ELL kernel.
+Semirings: the full ``core/semiring.py`` registry — ``plus_times`` on
+the MXU, everything else on the VPU via the registry-derived dispatch
+in ``repro.kernels.semirings`` (⊕-identity accumulator init on every
+row *open*, so the flush-on-row-change protocol is correct for
+non-additive monoids; invalid slots are skipped before they can touch
+the accumulator, which is what annihilator-aware padding means here).
 
 Autodiff: this module is the primal only. The ``plus_times`` form is
 made differentiable by the ``jax.custom_vjp`` rule in
@@ -48,7 +51,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import DEFAULT_BLOCK_N, _compat
 
-from repro.kernels.semiring_matmul import _VPU_SEMIRINGS, _vpu_tile_product
+from repro.kernels.semirings import accumulate_tile, kernel_semiring
 from repro.sparse.bcsr import BlockCSRMatrix
 
 Array = jax.Array
@@ -73,6 +76,7 @@ def _kernel(
     t_steps: int,
     fuse_bias_relu: bool,
 ):
+    spec = kernel_semiring(semiring_name)
     t = pl.program_id(1)
     row = row_id_ref[t]
     prev_row = row_id_ref[jnp.maximum(t - 1, 0)]
@@ -82,21 +86,18 @@ def _kernel(
 
     @pl.when(row_opens)
     def _init():
-        if semiring_name == "plus_times":
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-        else:
-            acc_ref[...] = jnp.full_like(
-                acc_ref, _VPU_SEMIRINGS[semiring_name][2]
-            )
+        # ⊕-identity init on every row OPEN — the flush-on-row-change
+        # lifecycle stays correct for non-additive monoids because a
+        # fresh row never sees another row's partial.
+        acc_ref[...] = jnp.full_like(acc_ref, spec.init)
 
     @pl.when(valid_ref[t] != 0)
     def _accumulate():
+        # invalid tail slots never reach the accumulator: skipped work
+        # contributes exactly the ⊕-identity (annihilator-aware padding)
         a = values_ref[0].astype(jnp.float32)
         b = b_ref[...].astype(jnp.float32)
-        if semiring_name == "plus_times":
-            acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
-        else:
-            acc_ref[...] = _vpu_tile_product(semiring_name, a, b, acc_ref[...])
+        acc_ref[...] = accumulate_tile(spec, a, b, acc_ref[...])
 
     @pl.when(row_closes)
     def _epilogue():
@@ -131,8 +132,7 @@ def bcsr_spmm(
     assert n % block_n == 0, (n, block_n)
     if fuse_bias_relu and bias is None:
         raise ValueError("fuse_bias_relu requires bias")
-    if semiring_name != "plus_times" and semiring_name not in _VPU_SEMIRINGS:
-        raise NotImplementedError(semiring_name)
+    kernel_semiring(semiring_name)  # fail fast on unknown semirings
     if bias is None:
         bias = jnp.zeros((m,), jnp.float32)
     bias2d = bias[:, None]

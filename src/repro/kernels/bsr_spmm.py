@@ -13,8 +13,11 @@ grid = (row_blocks, n_tiles, max_blocks_per_row):
   fused max-plus epilogue  max(acc + bias, 0)  — the paper's eWiseMult +
   eWiseAdd collapsed into the matmul's last store.
 
-Semirings: ``plus_times`` (MXU) and ``max_plus`` (VPU, chunked) — the two
-semirings of the paper's §III.
+Semirings: the full ``core/semiring.py`` registry — ``plus_times`` on
+the MXU, everything else chunked on the VPU via the registry-derived
+dispatch in ``repro.kernels.semirings`` (⊕-identity accumulator init at
+``t == 0``; masked pad slots are skipped before they can touch the
+accumulator, so padding contributes exactly the ⊕-identity).
 
 Autodiff: this module is the primal only. The ``plus_times`` form is
 made differentiable by the ``jax.custom_vjp`` rule in
@@ -35,7 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import DEFAULT_BLOCK_N, _compat
 
-from repro.kernels.semiring_matmul import _VPU_SEMIRINGS, _vpu_tile_product
+from repro.kernels.semirings import accumulate_tile, kernel_semiring
 from repro.sparse.bsr import BlockSparseMatrix
 
 Array = jax.Array
@@ -62,26 +65,21 @@ def _kernel(
     t_steps: int,
     fuse_bias_relu: bool,
 ):
+    spec = kernel_semiring(semiring_name)
     i = pl.program_id(0)
     t = pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
-        if semiring_name == "plus_times":
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-        else:
-            acc_ref[...] = jnp.full_like(
-                acc_ref, _VPU_SEMIRINGS[semiring_name][2]
-            )
+        acc_ref[...] = jnp.full_like(acc_ref, spec.init)
 
     @pl.when(mask_ref[i, t] != 0)
     def _accumulate():
+        # masked ELL pad slots never reach the accumulator: skipped work
+        # contributes exactly the ⊕-identity (annihilator-aware padding)
         a = blocks_ref[0, 0].astype(jnp.float32)
         b = b_ref[...].astype(jnp.float32)
-        if semiring_name == "plus_times":
-            acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
-        else:
-            acc_ref[...] = _vpu_tile_product(semiring_name, a, b, acc_ref[...])
+        acc_ref[...] = accumulate_tile(spec, a, b, acc_ref[...])
 
     @pl.when(t == t_steps - 1)
     def _epilogue():
@@ -111,8 +109,7 @@ def bsr_spmm(
     assert n % block_n == 0, (n, block_n)
     if fuse_bias_relu and bias is None:
         raise ValueError("fuse_bias_relu requires bias")
-    if semiring_name != "plus_times" and semiring_name not in _VPU_SEMIRINGS:
-        raise NotImplementedError(semiring_name)
+    kernel_semiring(semiring_name)  # fail fast on unknown semirings
     if bias is None:
         bias = jnp.zeros((m,), jnp.float32)
     bias2d = bias[:, None]

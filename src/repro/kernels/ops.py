@@ -36,6 +36,7 @@ from repro.kernels import autodiff as _ad
 from repro.kernels import bcsr_spmm as _bcsr
 from repro.kernels import bsr_spmm as _bsr
 from repro.kernels import semiring_matmul as _smm
+from repro.kernels.semirings import kernel_zero
 from repro.sparse.bcsr import BlockCSRMatrix
 from repro.sparse.bsr import BlockSparseMatrix
 
@@ -48,11 +49,10 @@ def auto_interpret() -> bool:
 
 
 def _semiring_zero(semiring_name: str) -> float:
-    """The ⊕-identity used for k-padding and empty-row fills — must match
-    the kernels' accumulator init."""
-    if semiring_name == "plus_times":
-        return 0.0
-    return _smm._VPU_SEMIRINGS[semiring_name][2]
+    """The ⊕-identity used for k-padding and empty-row fills — the same
+    registry-derived value the kernels init their accumulators with
+    (``repro.kernels.semirings``), so fills and inits cannot drift."""
+    return kernel_zero(semiring_name)
 
 
 def _pad_to(x: Array, axis: int, mult: int, fill: float = 0.0) -> Array:

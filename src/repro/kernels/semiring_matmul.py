@@ -6,9 +6,14 @@ with explicit VMEM tiling:
 * grid = (m/bm, n/bn, k/bk); the (i, j) output tile lives in a VMEM f32
   scratch accumulator across the k-steps (classic revisiting pattern).
 * ``plus_times`` uses the MXU (``jnp.dot`` with f32 accumulation).
-* max-plus / min-plus / max-min / min-max tile products run on the VPU;
-  the (bm, bk, bn) broadcast is chunked along k (``_K_CHUNK``) so the
-  working set stays ≪ VMEM:  bm·bn·4  +  bm·chunk·bn·4 bytes.
+* every other registry semiring runs its tile product on the VPU; the
+  (bm, bk, bn) broadcast is chunked along k (``semirings.K_CHUNK``) so
+  the working set stays ≪ VMEM:  bm·bn·4  +  bm·chunk·bn·4 bytes.
+
+Semiring dispatch (⊗/⊕ ops, accumulator init, annihilator fill) is
+derived from ``core/semiring.py``'s registry by
+``repro.kernels.semirings`` — the whole registry is supported, and
+adding a semiring there is a one-place change.
 
 TARGET is TPU; on CPU this file is exercised via ``interpret=True``
 (see ``repro.kernels.ops``), checked against ``repro.kernels.ref``.
@@ -24,41 +29,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import DEFAULT_BLOCK_N, _compat
+from repro.kernels.semirings import accumulate_tile, kernel_semiring
 
 Array = jax.Array
-
-_K_CHUNK = 8  # k-slab for VPU semiring tile products
-
-# name -> (elementwise ⊗, elementwise ⊕, accumulator init)
-_VPU_SEMIRINGS = {
-    "max_plus": (jnp.add, jnp.maximum, -jnp.inf),
-    "min_plus": (jnp.add, jnp.minimum, jnp.inf),
-    "max_min": (jnp.minimum, jnp.maximum, -jnp.inf),
-    "min_max": (jnp.maximum, jnp.minimum, jnp.inf),
-}
-
-
-def _vpu_tile_product(name: str, a: Array, b: Array, acc: Array) -> Array:
-    """acc ⊕= A_tile ⊗-contract B_tile for a VPU semiring."""
-    mul, add, _ = _VPU_SEMIRINGS[name]
-    bk = a.shape[1]
-    n_chunks = bk // _K_CHUNK
-
-    def body(c, acc):
-        a_c = jax.lax.dynamic_slice_in_dim(a, c * _K_CHUNK, _K_CHUNK, axis=1)
-        b_c = jax.lax.dynamic_slice_in_dim(b, c * _K_CHUNK, _K_CHUNK, axis=0)
-        prod = mul(a_c[:, :, None], b_c[None, :, :])  # (bm, chunk, bn)
-        return add(acc, add_reduce_axis1(prod, add))
-
-    return jax.lax.fori_loop(0, n_chunks, body, acc)
-
-
-def add_reduce_axis1(x: Array, add) -> Array:
-    if add is jnp.maximum:
-        return jnp.max(x, axis=1)
-    if add is jnp.minimum:
-        return jnp.min(x, axis=1)
-    raise NotImplementedError
 
 
 def _kernel(
@@ -72,22 +45,18 @@ def _kernel(
     k_steps: int,
     fuse_bias_relu: bool,
 ):
+    spec = kernel_semiring(semiring_name)
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
-        if semiring_name == "plus_times":
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-        else:
-            init = _VPU_SEMIRINGS[semiring_name][2]
-            acc_ref[...] = jnp.full_like(acc_ref, init)
+        # ⊕-identity init (0 for plus_times, ±inf for the tropical
+        # family, 0 for the boolean encodings, -inf for log_plus)
+        acc_ref[...] = jnp.full_like(acc_ref, spec.init)
 
     a = a_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
-    if semiring_name == "plus_times":
-        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
-    else:
-        acc_ref[...] = _vpu_tile_product(semiring_name, a, b, acc_ref[...])
+    acc_ref[...] = accumulate_tile(spec, a, b, acc_ref[...])
 
     @pl.when(kk == k_steps - 1)
     def _epilogue():
@@ -115,6 +84,8 @@ def semiring_matmul(
 
     a: (m, k); b: (k, n); bias: (m,) broadcast along n (paper's B[k]).
     m/k/n must divide the block sizes (wrappers in ``ops.py`` pad).
+    Any registry semiring; unknown names raise ``KeyError`` at trace
+    time via ``kernels.semirings``.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -123,8 +94,7 @@ def semiring_matmul(
         (m, n, k),
         (block_m, block_n, block_k),
     )
-    if semiring_name != "plus_times" and semiring_name not in _VPU_SEMIRINGS:
-        raise NotImplementedError(semiring_name)
+    kernel_semiring(semiring_name)  # fail fast on unknown semirings
     if fuse_bias_relu and bias is None:
         raise ValueError("fuse_bias_relu requires bias")
     if bias is None:

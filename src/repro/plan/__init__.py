@@ -19,6 +19,7 @@ from repro.plan.cache import (  # noqa: F401
 from repro.plan.cost import (  # noqa: F401
     layer_block_area,
     layer_grid_steps,
+    mxv_grid_steps,
     stack_block_work,
     stack_grid_steps,
 )
@@ -34,6 +35,12 @@ from repro.plan.layout import (  # noqa: F401
     layer_layout,
     preferred_layout,
     to_preferred_layout,
+)
+from repro.plan.mxm import (  # noqa: F401
+    MxmPlan,
+    mxm_cache_stats,
+    mxm_plan,
+    reset_mxm_cache,
 )
 from repro.plan.routes import (  # noqa: F401
     ROUTE_FUSED,

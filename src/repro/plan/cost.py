@@ -53,6 +53,17 @@ def layer_grid_steps(
     return -(-m // bm) * (-(-n // bn)) * -(-k // bk)
 
 
+def mxv_grid_steps(w: Weight, *, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Exact bill for a GraphBLAS ``mxv``/``vxm`` narrow panel (n = 1).
+
+    The vector rides through the kernels as a ``[:, None]`` panel; the
+    effective-tile shrink bottoms out at an 8-wide column tile, so the
+    bill is one 8-wide stripe of the weight's grid — NOT a full
+    ``DEFAULT_BLOCK_N``-wide tile. Same formula ``plan.mxm`` uses when
+    it builds a width-1 plan."""
+    return layer_grid_steps(w, 1, block_n=block_n)
+
+
 def stack_grid_steps(
     weights: Sequence[Weight], n: int, *, block_n: int = DEFAULT_BLOCK_N
 ) -> int:

@@ -41,7 +41,12 @@ def preferred_layout(w: BlockSparseMatrix) -> str:
     :data:`ELL_WASTE_THRESHOLD` (host-side: reads the mask).
     """
     nrb, mbpr = w.col_idx.shape
-    nnz = int(jax.device_get(w.nnz_blocks))
+    # numpy, not w.nnz_blocks: a jnp reduction would turn into a tracer
+    # inside a trace context even on a concrete (closed-over) mask,
+    # and plan builds may happen while tracing (graphblas.mxm routing).
+    import numpy as np
+
+    nnz = int(np.asarray(jax.device_get(w.block_mask)).sum())
     waste = 1.0 - nnz / float(nrb * mbpr)
     return "bcsr" if waste > ELL_WASTE_THRESHOLD else "ell"
 

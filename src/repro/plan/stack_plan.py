@@ -102,7 +102,13 @@ class PlanKey(NamedTuple):
     ``tuned`` is the :meth:`repro.tune.TunedConfig.token` of the tuning
     entry the plan was built under, or ``None`` for plans built on the
     hand-picked defaults — so a tuned and an untuned plan for the same
-    topology can never collide either."""
+    topology can never collide either.
+
+    ``semiring`` is the ⊕.⊗ algebra the plan's executable computes
+    (``repro.core.semiring`` registry name). DNN stack plans are always
+    ``plus_times``; the GraphBLAS ``mxm``/``mxv`` plans
+    (:mod:`repro.plan.mxm`) key their algebra here so a ``plus_times``
+    and a ``min_plus`` plan over the same topology can never collide."""
 
     fingerprint: str
     width: int
@@ -110,6 +116,7 @@ class PlanKey(NamedTuple):
     resident: bool | None  # the use_resident tri-state the caller asked
     mesh: str | None = None  # mesh/shard fingerprint, None = unsharded
     tuned: str | None = None  # TunedConfig token, None = default constants
+    semiring: str = "plus_times"  # the plan's ⊕.⊗ algebra
 
 
 @dataclasses.dataclass(frozen=True)

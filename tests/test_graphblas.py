@@ -36,6 +36,42 @@ def test_mxv_vxm(rng):
     np.testing.assert_allclose(gb.vxm(v, a), v @ a, rtol=1e-5)
 
 
+def test_mxv_is_mxm_column_bit_exact():
+    """mxv(A, v) must be mxm(A, v[:, None])[:, 0] — same kernel route,
+    same narrow-panel tile, bit-for-bit."""
+    from repro.core import MIN_PLUS
+
+    key = jax.random.PRNGKey(9)
+    a = BlockSparseMatrix.random(key, (64, 64), (8, 8), blocks_per_row=3)
+    v = jax.random.uniform(jax.random.PRNGKey(10), (64,), jnp.float32)
+    for sr in (PLUS_TIMES, MIN_PLUS):
+        np.testing.assert_array_equal(
+            np.asarray(gb.mxv(a, v, sr)),
+            np.asarray(gb.mxm(a, v[:, None], sr)[:, 0]),
+        )
+
+
+def test_mxv_bills_narrow_panel():
+    """A width-1 plan is billed at the effective 8-wide tile — the cost
+    model's shrink, not a full DEFAULT_BLOCK_N-wide tile."""
+    from repro.kernels import DEFAULT_BLOCK_N
+    from repro.kernels.ops import effective_block_n
+    from repro.plan.cost import layer_grid_steps, mxv_grid_steps
+    from repro.plan.mxm import mxm_plan, reset_mxm_cache
+
+    key = jax.random.PRNGKey(11)
+    a = BlockSparseMatrix.random(key, (64, 64), (8, 8), blocks_per_row=3)
+    assert effective_block_n(1, DEFAULT_BLOCK_N) == 8
+    reset_mxm_cache()
+    plan = mxm_plan(a, 1)
+    assert plan.width == 1
+    assert plan.grid_steps == mxv_grid_steps(a) == layer_grid_steps(a, 1)
+    # a panel wider than one 8-wide tile but narrower than a full block_n
+    # tile pays MORE tiles than the vector panel — the shrink is real
+    assert layer_grid_steps(a, 9) > mxv_grid_steps(a)
+    reset_mxm_cache()
+
+
 def test_ewise_ops_max_plus():
     """The paper's bias-add (eWiseMult ⊗=+) and ReLU (eWiseAdd ⊕=max)."""
     y = jnp.array([[-1.0, 2.0], [3.0, -4.0]])

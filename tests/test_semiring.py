@@ -110,3 +110,64 @@ def test_registry_lookup():
     assert sr.get_semiring("max_plus") is sr.MAX_PLUS
     with pytest.raises(KeyError):
         sr.get_semiring("nope")
+
+
+# --- full-registry semiring laws (property-based) ------------------------
+#
+# Every registry algebra — not just the four float-exact tropical ones —
+# must satisfy the semiring axioms on its own operating domain: booleans
+# for the lattice/GF(2) pairs, integer-valued floats elsewhere (exact in
+# f32). ``log_plus`` ⊕ = logaddexp only associates/distributes to float
+# roundoff, so it alone is compared with a tolerance.
+
+
+def _domain(s, a):
+    if s.name in ("lor_land", "xor_and"):
+        return jnp.asarray(a) > 0
+    return jnp.asarray(a)
+
+
+def _law_assert(s, left, right):
+    if s.name == "log_plus":
+        np.testing.assert_allclose(
+            np.asarray(left), np.asarray(right), rtol=1e-5, atol=1e-6
+        )
+    else:
+        np.testing.assert_array_equal(np.asarray(left), np.asarray(right))
+
+
+@hypothesis.given(a=small_ints, b=small_ints, c=small_ints)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_full_registry_add_monoid_laws(a, b, c):
+    """⊕ commutative + associative for EVERY registry semiring."""
+    for s in ALL:
+        aj, bj, cj = _domain(s, a), _domain(s, b), _domain(s, c)
+        _law_assert(s, s.add(aj, bj), s.add(bj, aj))
+        _law_assert(s, s.add(s.add(aj, bj), cj), s.add(aj, s.add(bj, cj)))
+
+
+@hypothesis.given(a=small_ints, b=small_ints, c=small_ints)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_full_registry_distributivity(a, b, c):
+    """⊗ distributes over ⊕ (both sides) for EVERY registry semiring."""
+    for s in ALL:
+        aj, bj, cj = _domain(s, a), _domain(s, b), _domain(s, c)
+        _law_assert(
+            s, s.mul(aj, s.add(bj, cj)), s.add(s.mul(aj, bj), s.mul(aj, cj))
+        )
+        _law_assert(
+            s, s.mul(s.add(bj, cj), aj), s.add(s.mul(bj, aj), s.mul(cj, aj))
+        )
+
+
+@hypothesis.given(a=small_ints)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_full_registry_annihilator_absorption(a):
+    """a ⊗ 0̸ = 0̸ ⊗ a = 0̸ and a ⊕ 0̸ = a for EVERY registry semiring —
+    the exact property that lets kernels skip missing/padded blocks."""
+    for s in ALL:
+        aj = _domain(s, a)
+        zj = jnp.full_like(aj, bool(s.zero) if aj.dtype == bool else s.zero)
+        _law_assert(s, s.mul(aj, zj), zj)
+        _law_assert(s, s.mul(zj, aj), zj)
+        _law_assert(s, s.add(aj, zj), aj)

@@ -89,6 +89,16 @@ PARAMS = {
         "density",
         "seed",
     ),
+    "gnn": (
+        "m",
+        "block",
+        "total_blocks",
+        "skew",
+        "feat_dim",
+        "rounds",
+        "bf_iters_cap",
+        "seed",
+    ),
     "tune": ("params",),
     "fleet": (
         "m",
@@ -214,6 +224,28 @@ CHALLENGE_EXACT = (
     "grid_steps",
     "n_categories",
     "reference_match",
+)
+# GNN arm (semiring-kernel routing): layouts, grid-step bills,
+# pallas_call counts, plan-cache traffic, and the Bellman-Ford fixpoint
+# are pure functions of the seeded topology — checked exactly; the
+# convolution's scale-normalized error float rides on the runner's
+# accumulation order and is gated via the conv_matches_oracle bool.
+GNN_EXACT = (
+    "source_layout",
+    "exec_layout",
+    "kernel_grid_steps",
+    "xla_sparse_grid_steps",
+    "mxv_grid_steps",
+    "pallas_calls_conv",
+    "pallas_calls_oracle",
+    "conv_matches_oracle",
+    "conv_plan_builds",
+    "conv_plan_hits",
+    "bf_iters",
+    "bf_converged",
+    "bf_reachable",
+    "bf_matches_numpy",
+    "bf_plan_hits",
 )
 # Tune arm (autotuner sweep): winners, routes, and the cost-model bills
 # are pure functions of the generator params — checked exactly; probe
@@ -550,6 +582,60 @@ def check(baseline: dict, fresh: dict, tol: float) -> Gate:
         wt_b, wt_f = bs.get("wall_time_s"), fs.get("wall_time_s")
         if wt_b is not None and wt_f is not None:
             gate.time("challenge", "wall_time_s", wt_b, wt_f)
+
+    # --- gnn: semiring-kernel routing exact, headline wins gated ------
+    pair = _section_pair(gate, "gnn", baseline, fresh)
+    if pair is not None:
+        bs, fs = pair
+        for field in GNN_EXACT:
+            if field not in bs:
+                gate.skip("gnn", f"{field} absent from baseline")
+                continue
+            if field not in fs:
+                gate.missing("gnn", field)
+                continue
+            gate.exact("gnn", field, bs[field], fs[field])
+        # headline invariants, gated regardless of baseline drift: the
+        # kernel route must launch (and the oracle route must not), its
+        # bill must STRICTLY beat the occupancy-equivalent XLA sparse
+        # path, and the min_plus Bellman-Ford relaxation must reach the
+        # numpy reference fixpoint bit-for-bit.
+        launched = (
+            fs.get("pallas_calls_conv", 0) >= 1
+            and fs.get("pallas_calls_oracle", 1) == 0
+        )
+        gate._add(
+            "gnn",
+            "mxm_launches_kernel_route",
+            True,
+            launched,
+            "ok" if launched else "FAIL",
+        )
+        beat = (
+            fs.get("kernel_grid_steps", 1 << 62)
+            < fs.get("xla_sparse_grid_steps", 0)
+        )
+        gate._add(
+            "gnn",
+            "kernel_beats_xla_sparse_steps",
+            True,
+            beat,
+            "ok" if beat else "FAIL",
+        )
+        bf_ok = (
+            fs.get("bf_converged", False)
+            and fs.get("bf_matches_numpy", False)
+        )
+        gate._add(
+            "gnn",
+            "bellman_ford_matches_numpy",
+            True,
+            bf_ok,
+            "ok" if bf_ok else "FAIL",
+        )
+        wt_b, wt_f = bs.get("wall_time_s"), fs.get("wall_time_s")
+        if wt_b is not None and wt_f is not None:
+            gate.time("gnn", "wall_time_s", wt_b, wt_f)
 
     # --- tune: sweep accounting exact, headline wins gated ------------
     pair = _section_pair(gate, "tune", baseline, fresh)
